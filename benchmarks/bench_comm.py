@@ -1,0 +1,75 @@
+"""Paper Table VII — communication vs computation.
+
+The paper shows PCIe transfer time ≪ GPU compute time per dataset.  The pod
+analogue compares ICI collective bytes vs on-chip FLOPs for the distributed
+eigensolver, measured two ways:
+
+1. from the dry-run artifacts (512-device production mesh) when present;
+2. live on an 8-virtual-device mesh (subprocess) — all-gather bytes of the
+   shard_map SpMV vs its matvec FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+
+def from_dryrun() -> bool:
+    found = False
+    for path in sorted(glob.glob("reports/dryrun/single/spectral__*.json")):
+        r = json.load(open(path))
+        if "compute_s" not in r:
+            continue
+        found = True
+        name = r["cell"].replace("/", "_")
+        ratio = r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12)
+        emit(f"comm/{name}", r["collective_s"] * 1e6,
+             f"coll/(compute+mem)={ratio:.2f};bytes={r['coll_bytes_dev']:.2e}")
+    return found
+
+
+def live_8dev() -> None:
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp, time
+        from repro.data.sbm import sbm_graph
+        from repro.sparse.distributed import (partition_coo_by_rows, shard_edges,
+            shard_vector, make_sharded_spmv)
+        mesh = jax.make_mesh((8,), ("data",))
+        coo, _ = sbm_graph(2000, 8, 0.05, 0.002, seed=0)
+        sm = shard_edges(mesh, partition_coo_by_rows(coo, 8), "data")
+        x = shard_vector(mesh, jnp.ones((sm.shape[0],), jnp.float32), "data")
+        spmv = jax.jit(make_sharded_spmv(mesh, sm, axis="data"))
+        jax.block_until_ready(spmv(sm.row_local, sm.col, sm.val, x))
+        t0 = time.perf_counter()
+        for _ in range(10):
+            x = spmv(sm.row_local, sm.col, sm.val, x)
+        jax.block_until_ready(x)
+        us = (time.perf_counter()-t0)/10*1e6
+        gather_bytes = sm.shape[0]*4  # one fp32 n-vector all-gathered / matvec
+        flops = 2*sm.row_local.shape[0]
+        print(f"LIVE,{us:.1f},gather_bytes={gather_bytes};matvec_flops={flops};ratio_B_per_F={gather_bytes/flops:.3f}")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True, text=True,
+                         env=env, timeout=600)
+    for line in out.stdout.splitlines():
+        if line.startswith("LIVE,"):
+            _, us, derived = line.split(",", 2)
+            emit("comm/live_8dev_shardmap_spmv", float(us), derived)
+
+
+def main() -> None:
+    from_dryrun()
+    live_8dev()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 3-6 — end-to-end spectral clustering on the four dataset
+shapes (CPU-scaled; full-shape costs are dry-run territory, §Roofline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from repro.data.sbm import sbm_graph
+
+
+DATASETS = {
+    # name: (n_per, clusters, p_in, p_out)  — shaped after Table II, scaled
+    "fb_like": (404, 10, 0.08, 0.005),
+    "syn200_like": (100, 50, 0.3, 0.002),
+    "dblp_like": (80, 100, 0.4, 0.0005),
+}
+
+
+def main() -> None:
+    for name, (n_per, r, p, q) in DATASETS.items():
+        coo, truth = sbm_graph(n_per, r, p, q, seed=7)
+        cfg = SpectralClusteringConfig(n_clusters=r, kmeans_assign="ref")
+        fn = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))
+        us = time_fn(fn, coo, jax.random.PRNGKey(0), iters=2)
+        out = fn(coo, jax.random.PRNGKey(0))
+        lab = np.asarray(out.labels)
+        from collections import Counter
+
+        pur = sum(Counter(truth[lab == i]).most_common(1)[0][1] for i in np.unique(lab)) / len(truth)
+        emit(f"pipeline/{name}_n{coo.shape[0]}_k{r}", us,
+             f"purity={pur:.3f};restarts={int(out.lanczos_restarts)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark plumbing: timing helpers + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries a
+benchmark-specific figure of merit, e.g. GFLOP/s or speedup×).  CPU numbers
+are for *relative* comparisons (optimized vs naive path under the same
+backend) — absolute TPU projections live in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

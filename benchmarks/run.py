@@ -1,0 +1,22 @@
+"""Benchmark harness — one module per paper table (see DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows."""
+import importlib
+
+MODULES = [
+    "benchmarks.bench_similarity",   # Table III row 1
+    "benchmarks.bench_eigensolver",  # Tables III-VI "Sparse Eigensolver"
+    "benchmarks.bench_kmeans",       # Tables III-VI "K-means Clustering"
+    "benchmarks.bench_comm",         # Table VII
+    "benchmarks.bench_pipeline",     # Fig. 3-6
+    "benchmarks.bench_quality",      # output-quality gate
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for m in MODULES:
+        importlib.import_module(m).main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic versioned saves, auto-resume,
+elastic resharding onto a different mesh."""
+
+from repro.ckpt.manager import CheckpointManager  # noqa: F401
+from repro.ckpt.elastic import reshard_tree  # noqa: F401

@@ -1,0 +1,49 @@
+"""Elastic restart: reshard a restored state onto a *different* mesh.
+
+Scenario: a 512-chip job loses a slice and restarts on 448 chips (or scales
+up).  Checkpoint leaves are stored unsharded (global arrays); resharding is
+therefore a pure ``device_put`` against the new mesh's NamedShardings, with
+divisibility handled by padding rules supplied per logical axis.
+
+``plan_elastic_mesh`` picks the largest (data, model) grid that fits the
+surviving device count while keeping the model axis fixed (TP degree is a
+property of the lowered program; DP shrinks elastically).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import Rules, to_partition_specs
+
+
+def plan_elastic_mesh(n_devices: int, model_parallel: int, *, pod_axis: bool = False,
+                      devices=None) -> Mesh:
+    """Largest data axis that fits: data = n_devices // model_parallel."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model axis {model_parallel} with only {n_devices} devices"
+        )
+    data = n_devices // model_parallel
+    usable = data * model_parallel
+    devs = (devices or jax.devices())[:usable]
+    import numpy as np
+
+    arr = np.array(devs).reshape(data, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree, logical_tree, rules: Rules, mesh: Mesh):
+    """device_put every leaf onto ``mesh`` per its logical spec."""
+    specs = to_partition_specs(logical_tree, rules)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, specs)
+
+
+def replicate_tree(tree, mesh: Mesh):
+    return jax.tree.map(lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)

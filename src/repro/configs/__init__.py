@@ -1,0 +1,38 @@
+"""Architecture registry: the 10 assigned archs + the paper's own pipeline.
+
+``ARCHS`` maps arch id → :class:`repro.configs.base.ArchDef`;
+``repro.configs.cells`` turns (arch × shape) into lowerable cells for the
+dry-run (launch/dryrun.py) and the smoke tests.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchDef
+
+_MODULES = [
+    "glm4_9b",
+    "qwen2_7b",
+    "qwen3_0p6b",
+    "granite_moe_3b_a800m",
+    "olmoe_1b_7b",
+    "equiformer_v2",
+    "pna",
+    "nequip",
+    "gcn_cora",
+    "autoint",
+    "spectral",
+]
+
+
+def _load() -> dict:
+    import importlib
+
+    out = {}
+    for m in _MODULES:
+        mod = importlib.import_module(f"repro.configs.{m}")
+        out[mod.ARCH.name] = mod.ARCH
+    return out
+
+
+ARCHS = _load()
+
+ASSIGNED = [a for a in ARCHS.values() if a.name != "spectral"]

@@ -1,0 +1,547 @@
+"""Cell builders: (arch × shape) → a lowerable dry-run cell.
+
+A :class:`Cell` carries the step function, abstract input shapes
+(ShapeDtypeStruct pytrees — no allocation), and the PartitionSpec pytrees
+that shard them on the production mesh.  ``launch/dryrun.py`` resolves the
+specs against a concrete mesh and calls ``jit(fn).lower(...).compile()``.
+
+Per-family step semantics (DESIGN.md §6):
+  lm/train_4k      train_step (loss+AdamW), microbatched per MICROBATCH
+  lm/prefill_32k   prefill (chunked flash attention, returns cache)
+  lm/decode_*      decode_step (1 token vs KV cache); long_500k skipped for
+                   the five full-attention archs (assignment rule)
+  gnn/*            full-batch / sampled-subgraph / batched-molecule train
+  recsys/*         train, serve logits, bulk scoring, IVF retrieval scoring
+  spectral/*       the paper's pipeline on its four datasets (fixed-cost
+                   Lanczos restarts + k-means iters for exact roofline math)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, ShapeSpec
+from repro.launch import sharding as shd
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import TrainState, init_state, make_train_step
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees
+    in_specs: Tuple[Any, ...]  # PartitionSpec pytrees (same structure)
+    donate: Tuple[int, ...] = ()
+    skip: Optional[str] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def zero1_opt_specs(param_specs, param_shapes, rules):
+    """ZeRO-1: shard fp32 optimizer moments over the data axis too.
+
+    For each param leaf, the first axis that is unsharded in the param spec
+    and divisible by the full data-parallel degree (32 covers both meshes)
+    additionally gets the 'batch' mesh axes.  Params stay replicated over
+    data (plain DP); only m/v shard — the AdamW update then computes a
+    shard of the step and GSPMD all-gathers the new params (ZeRO-1).
+    """
+    data_axes = shd.resolve(("batch",), rules)
+    axes = data_axes[0] if len(data_axes) else None
+    if axes is None:
+        return param_specs
+
+    def one(spec, shape):
+        spec = spec if spec is not None else P()
+        entries = list(spec) + [None] * (len(shape.shape) - len(spec))
+        for i, (e, dim) in enumerate(zip(entries, shape.shape)):
+            if e is None and dim % 32 == 0:
+                entries[i] = axes
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(one, param_specs, param_shapes,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _skip(name, reason):
+    return Cell(name=name, fn=None, args=(), in_specs=(), skip=reason)
+
+
+# microbatch accumulation per LM arch (activation-memory fit; §Perf knob)
+LM_ACCUM = {
+    "glm4-9b": 8,
+    "qwen2-7b": 8,
+    "qwen3-0.6b": 2,
+    "granite-moe-3b-a800m": 4,
+    "olmoe-1b-7b": 4,
+}
+
+OPT_CFG = AdamWConfig(lr=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: ArchDef, sspec: ShapeSpec, rules, *, accum_unroll: bool = False) -> Cell:
+    from repro.models import transformer as tfm
+
+    cfg = arch.config
+    name = f"{arch.name}/{sspec.name}"
+    B = sspec.dims["global_batch"]
+    S = sspec.dims["seq_len"]
+    if sspec.name == "long_500k" and not arch.sub_quadratic:
+        return _skip(name, "SKIP(full-attn): long_500k is defined for "
+                           "sub-quadratic archs only (assignment rule)")
+
+    pspec = shd.to_partition_specs(tfm.logical_specs(cfg), rules)
+    params_shape = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    bspec = shd.resolve(("batch", None), rules)
+
+    if sspec.kind == "train":
+        state_shape = jax.eval_shape(
+            lambda: init_state(tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        )
+        ospec = zero1_opt_specs(pspec, params_shape, rules)
+        state_spec = TrainState(
+            params=pspec, opt={"m": ospec, "v": ospec, "step": P()}, step=P()
+        )
+        accum = LM_ACCUM.get(arch.name, 1)
+        step = make_train_step(
+            lambda p, b: tfm.train_loss(p, b, cfg), OPT_CFG, accum_steps=accum,
+            accum_unroll=accum_unroll,
+        )
+        batch = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        bspecs = {"tokens": bspec, "labels": bspec}
+        return Cell(name, step, (state_shape, batch), (state_spec, bspecs), donate=(0,),
+                    meta={"accum": accum})
+
+    if sspec.kind == "prefill":
+        fn = partial(tfm.prefill, cfg=cfg)
+        toks = _sds((B, S), jnp.int32)
+        return Cell(name, fn, (params_shape, toks), (pspec, bspec))
+
+    # decode
+    fn = partial(tfm.decode_step, cfg=cfg)
+    cache_shape = jax.eval_shape(lambda: tfm.make_cache(cfg, B, S))
+    cache_spec = shd.to_partition_specs(tfm.cache_logical_specs(), rules)
+    cl = _sds((B,), jnp.int32)
+    tok = _sds((B,), jnp.int32)
+    blk = shd.resolve(("batch",), rules)
+    return Cell(
+        name, fn,
+        (params_shape, cache_shape, cl, tok),
+        (pspec, cache_spec, blk, blk),
+        donate=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _gnn_model(arch: ArchDef):
+    if arch.name == "gcn-cora":
+        from repro.models.gnn import gcn as mod
+    elif arch.name == "pna":
+        from repro.models.gnn import pna as mod
+    elif arch.name == "nequip":
+        from repro.models.gnn import nequip as mod
+    else:
+        from repro.models.gnn import equiformer_v2 as mod
+    return mod
+
+
+def gnn_shape_config(arch: ArchDef, sspec: ShapeSpec):
+    """Adapt the arch config to a cell: io dims + task come from the shape."""
+    cfg = arch.config
+    d = sspec.dims
+    geometric = arch.name in ("nequip", "equiformer-v2")
+    if sspec.name == "molecule":
+        task = "graph_reg"
+        n_classes = 1
+        d_in = 16
+    else:
+        task = "node_class"
+        n_classes = d["n_classes"]
+        d_in = d.get("d_feat", 16)
+    if geometric:
+        return dataclasses.replace(cfg, n_classes=n_classes, task=task)
+    return dataclasses.replace(cfg, d_in=d_in, n_classes=n_classes, task=task)
+
+
+def _pad_div(x: int, mult: int = 32) -> int:
+    """Pad a sharded dim to the mesh-divisibility multiple (pod·data = 32
+    covers both production meshes); padding rows/edges are mask-zeroed by
+    the data pipeline, exactly like sampler padding."""
+    return ((x + mult - 1) // mult) * mult
+
+
+def gnn_batch_shapes(arch: ArchDef, sspec: ShapeSpec, rules):
+    """(GraphBatch of SDS, GraphBatch of specs) for a cell."""
+    from repro.models.gnn.graph import GraphBatch
+    from repro.data.sampler import subgraph_capacities
+
+    d = sspec.dims
+    geometric = arch.name in ("nequip", "equiformer-v2")
+    if sspec.name == "molecule":
+        G = d["batch"]
+        N = d["n_nodes"] * G
+        E = d["n_edges"] * G
+        n_graphs, graph_id = G, _sds((N,), jnp.int32)
+        labels, lmask = _sds((G,), jnp.float32), _sds((G,), jnp.float32)
+        d_in = 16
+    elif sspec.name == "minibatch_lg":
+        N, E = subgraph_capacities(d["batch_nodes"], (d["fanout0"], d["fanout1"]))
+        n_graphs, graph_id = 1, None
+        labels, lmask = _sds((N,), jnp.int32), _sds((N,), jnp.float32)
+        d_in = d["d_feat"]
+    else:
+        N, E = d["n_nodes"], d["n_edges"]
+        n_graphs, graph_id = 1, None
+        d_in = d["d_feat"]
+        N, E = _pad_div(N), _pad_div(E)
+        labels, lmask = _sds((N,), jnp.int32), _sds((N,), jnp.float32)
+
+    N, E = _pad_div(N), _pad_div(E)
+    nodes = shd.resolve(("nodes",), rules)
+    nodes2 = shd.resolve(("nodes", None), rules)
+    edges = shd.resolve(("edges",), rules)
+
+    batch = GraphBatch(
+        node_feat=_sds((N, 1 if geometric else d_in), jnp.float32),
+        edge_src=_sds((E,), jnp.int32),
+        edge_dst=_sds((E,), jnp.int32),
+        edge_mask=_sds((E,), jnp.float32),
+        labels=labels,
+        label_mask=lmask,
+        positions=_sds((N, 3), jnp.float32) if geometric else None,
+        species=_sds((N,), jnp.int32) if geometric else None,
+        graph_id=graph_id,
+        n_graphs=n_graphs,
+    )
+    lspec = nodes if sspec.name != "molecule" else P()
+    specs = GraphBatch(
+        node_feat=nodes2,
+        edge_src=edges,
+        edge_dst=edges,
+        edge_mask=edges,
+        labels=lspec,
+        label_mask=lspec,
+        positions=nodes2 if geometric else None,
+        species=nodes if geometric else None,
+        graph_id=nodes if graph_id is not None else None,
+        n_graphs=n_graphs,
+    )
+    return batch, specs
+
+
+def _gnn_cell(arch: ArchDef, sspec: ShapeSpec, rules) -> Cell:
+    mod = _gnn_model(arch)
+    name = f"{arch.name}/{sspec.name}"
+    cfg = gnn_shape_config(arch, sspec)
+    pspec = shd.to_partition_specs(mod.logical_specs(cfg), rules)
+    state_shape = jax.eval_shape(lambda: init_state(mod.init_params(cfg, jax.random.PRNGKey(0))))
+    state_spec = TrainState(params=pspec, opt={"m": pspec, "v": pspec, "step": P()}, step=P())
+    step = make_train_step(lambda p, b: mod.loss(p, b, cfg), OPT_CFG)
+    batch, bspecs = gnn_batch_shapes(arch, sspec, rules)
+    return Cell(name, step, (state_shape, batch), (state_spec, bspecs), donate=(0,))
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(cfg, B, rules, with_labels):
+    ids = _sds((B, cfg.n_fields - cfg.n_multihot), jnp.int32)
+    bags = _sds((B, cfg.n_multihot, cfg.hot_per_field), jnp.int32)
+    b = {"ids": ids, "bag_ids": bags}
+    shardable = B % 32 == 0  # retrieval_cand has B=1 — replicate it
+    bs = shd.resolve(("batch", None), rules) if shardable else P()
+    bs3 = shd.resolve(("batch", None, None), rules) if shardable else P()
+    specs = {"ids": bs, "bag_ids": bs3}
+    if with_labels:
+        b["labels"] = _sds((B,), jnp.int32)
+        specs["labels"] = shd.resolve(("batch",), rules) if shardable else P()
+    return b, specs
+
+
+def _recsys_cell(arch: ArchDef, sspec: ShapeSpec, rules) -> Cell:
+    from repro.models import recsys as rs
+
+    cfg = arch.config
+    name = f"{arch.name}/{sspec.name}"
+    pspec = shd.to_partition_specs(rs.logical_specs(cfg), rules)
+    params_shape = jax.eval_shape(lambda: rs.init_params(cfg, jax.random.PRNGKey(0)))
+
+    if sspec.kind == "train":
+        state_shape = jax.eval_shape(lambda: init_state(rs.init_params(cfg, jax.random.PRNGKey(0))))
+        state_spec = TrainState(params=pspec, opt={"m": pspec, "v": pspec, "step": P()}, step=P())
+        step = make_train_step(lambda p, b: rs.train_loss(p, b, cfg), OPT_CFG)
+        batch, bspecs = _recsys_batch(cfg, sspec.dims["batch"], rules, True)
+        return Cell(name, step, (state_shape, batch), (state_spec, bspecs), donate=(0,))
+
+    if sspec.kind == "serve":
+        fn = partial(rs.forward_logits, cfg=cfg)
+        batch, bspecs = _recsys_batch(cfg, sspec.dims["batch"], rules, False)
+        return Cell(name, fn, (params_shape, batch), (pspec, bspecs))
+
+    # retrieval: 1 query vs n_candidates
+    NC = sspec.dims["n_candidates"]
+
+    def retrieve(params, batch, candidates):
+        q = rs.query_embedding(params, batch, cfg)
+        return rs.retrieval_scores(q, candidates)
+
+    batch, bspecs = _recsys_batch(cfg, sspec.dims["batch"], rules, False)
+    cands = _sds((NC, 64), jnp.float32)
+    cspec = shd.resolve(("candidates", None), rules)
+    return Cell(name, retrieve, (params_shape, batch, cands), (pspec, bspecs, cspec))
+
+
+# ---------------------------------------------------------------------------
+# spectral (the paper's own architecture)
+# ---------------------------------------------------------------------------
+
+def spectral_cell(arch: ArchDef, sspec: ShapeSpec, rules, *, mesh=None,
+                  variant: str = "gspmd", gather_dtype=None,
+                  data_axes=("pod", "data")) -> Cell:
+    from repro.core.distributed_pipeline import spectral_cluster_sharded
+    from repro.core.pipeline import SpectralClusteringConfig
+    from repro.sparse.distributed import ShardedCOO
+
+    name = f"{arch.name}/{sspec.name}" + ("" if variant == "gspmd" else f"[{variant}]")
+    d = sspec.dims
+    n, nnz, k = d["n_nodes"], d["n_edges"], d["k"]
+
+    # shard geometry (shapes only; the real partitioner computes the same)
+    if mesh is not None:
+        num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    else:
+        num_shards = 16
+    rps = math.ceil(n / num_shards)
+    eps_ = math.ceil(nnz * 1.05 / num_shards)
+    sm = ShardedCOO(
+        row_local=_sds((num_shards * eps_,), jnp.int32),
+        col=_sds((num_shards * eps_,), jnp.int32),
+        val=_sds((num_shards * eps_,), jnp.float32),
+        shape=(rps * num_shards, rps * num_shards),
+        rows_per_shard=rps,
+        num_shards=num_shards,
+        edges_per_shard=eps_,
+    )
+    espec = shd.resolve(("edges",), rules)
+    sm_spec = ShardedCOO(espec, espec, espec, sm.shape, rps, num_shards, eps_)
+
+    scfg = SpectralClusteringConfig(
+        n_clusters=k,
+        lanczos_m=2 * k,
+        fixed_restarts=arch.config.fixed_restarts,
+        fixed_kmeans_iters=arch.config.fixed_kmeans_iters,
+        kmeans_assign="ref",
+    )
+    axis = tuple(a for a in data_axes if mesh is None or a in mesh.axis_names)
+
+    def fn(sm_in, key):
+        out = spectral_cluster_sharded(
+            sm_in, scfg, key, variant=variant, mesh=mesh, axis=axis,
+            gather_dtype=gather_dtype,
+        )
+        return out.labels, out.eigenvalues, out.kmeans_inertia
+
+    key = _sds((2,), jnp.uint32)
+    return Cell(name, fn, (sm, key), (sm_spec, P()), meta={"k": k, "n": n, "nnz": nnz,
+                                                           "variant": variant})
+
+
+# ---------------------------------------------------------------------------
+# cost-exact lowering variants
+# ---------------------------------------------------------------------------
+# XLA's cost analysis counts loop bodies ONCE regardless of trip count
+# (verified empirically — see EXPERIMENTS.md §Dry-run method).  The memory
+# pass uses the production (rolled) lowering; the cost pass uses unrolled /
+# component lowerings that make op counts exact:
+#   lm        two unrolled lowers at n_layers ∈ {2, 4}; linear fit
+#             total(L) = const + L·per_layer recovers the full-depth cost
+#             (the attention chunk scan is widened to one chunk so nothing
+#             hides in an inner loop)
+#   gnn       edge-chunk scan disabled (single body = whole edge set)
+#   recsys    loop-free already — memory pass is also the cost pass
+#   spectral  per-stage component cells (Lanczos step / restart / k-means
+#             iter / k-means++ step) combined with the known trip counts —
+#             mirroring the paper's own per-stage cost model (Eq. 10)
+
+
+def lm_cost_cells(arch: ArchDef, shape_name: str, rules):
+    """[(n_layers, Cell)] unrolled lowers for the linear cost fit."""
+    sspec = arch.shapes[shape_name]
+    out = []
+    for L in (2, 4):
+        cfg = dataclasses.replace(
+            arch.config, n_layers=L, scan_unroll=True,
+            attn_chunk=sspec.dims["seq_len"],
+        )
+        a = dataclasses.replace(arch, config=cfg)
+        cell = _lm_cell(a, sspec, rules, accum_unroll=True)
+        cell.name = f"{arch.name}/{shape_name}[cost L={L}]"
+        out.append((L, cell))
+    return out
+
+
+def gnn_cost_cell(arch: ArchDef, shape_name: str, rules) -> Optional[Cell]:
+    """Loop-free lowering: edge chunking off, layer scan unrolled."""
+    cfg = arch.config
+    sspec = arch.shapes[shape_name]
+    replace = {}
+    chunk = getattr(cfg, "edge_chunk", None)
+    if chunk:
+        batch, _ = gnn_batch_shapes(arch, sspec, rules)
+        if batch.edge_src.shape[0] > chunk:
+            replace["edge_chunk"] = None
+    if getattr(cfg, "scan_layers", False) and cfg.n_layers > 1:
+        replace["scan_layers"] = False
+    if not replace:
+        return None  # production lowering is already loop-free = exact
+    a = dataclasses.replace(arch, config=dataclasses.replace(cfg, **replace))
+    cell = _gnn_cell(a, sspec, rules)
+    cell.name = f"{arch.name}/{shape_name}[cost {','.join(replace)}]"
+    return cell
+
+
+def spectral_component_cells(arch: ArchDef, shape_name: str, rules, *, mesh=None,
+                             variant: str = "gspmd", gather_dtype=None,
+                             data_axes=("pod", "data")):
+    """Per-stage cells + trip counts: [(label, Cell, trip_count)]."""
+    from repro.core.distributed_pipeline import normalize_sharded
+    from repro.core.kmeans import assign_ref, update_centroids
+    from repro.sparse.distributed import ShardedCOO, make_sharded_spmv, spmv_gspmd
+
+    sspec = arch.shapes[shape_name]
+    d = sspec.dims
+    n_raw, nnz, k = d["n_nodes"], d["n_edges"], d["k"]
+    m = 2 * k
+    if mesh is not None:
+        num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    else:
+        num_shards = 16
+    rps = math.ceil(n_raw / num_shards)
+    n = rps * num_shards
+    eps_ = math.ceil(nnz * 1.05 / num_shards)
+    sm = ShardedCOO(
+        row_local=_sds((num_shards * eps_,), jnp.int32),
+        col=_sds((num_shards * eps_,), jnp.int32),
+        val=_sds((num_shards * eps_,), jnp.float32),
+        shape=(n, n), rows_per_shard=rps, num_shards=num_shards,
+        edges_per_shard=eps_,
+    )
+    espec = shd.resolve(("edges",), rules)
+    sm_spec = ShardedCOO(espec, espec, espec, sm.shape, rps, num_shards, eps_)
+    vspec = shd.resolve(("nodes",), rules)
+    Vspec = shd.resolve((None, "nodes"), rules)
+    hspec = shd.resolve(("nodes", None), rules)
+    axis = tuple(a for a in data_axes if mesh is None or a in mesh.axis_names)
+
+    def matvec_of(sm_in):
+        if variant == "shard_map":
+            inner = make_sharded_spmv(mesh, sm_in, axis=axis, gather_dtype=gather_dtype)
+            return lambda x: inner(sm_in.row_local, sm_in.col, sm_in.val, x)
+        return lambda x: spmv_gspmd(sm_in, x)
+
+    # (a) one Lanczos step: matvec + coefficient + two-pass reorth
+    def lanczos_step(sm_in, V, v):
+        w = matvec_of(sm_in)(v)
+        c = V @ w
+        w = w - V.T @ c
+        c2 = V @ w
+        w = w - V.T @ c2
+        return w, c
+
+    V = _sds((m + 1, n), jnp.float32)
+    v = _sds((n,), jnp.float32)
+    step_cell = Cell(f"{arch.name}/{shape_name}[lanczos_step]", lanczos_step,
+                     (sm, V, v), (sm_spec, Vspec, vspec))
+
+    # (b) restart: projected eigh + thick-restart basis rotation
+    l_keep = min(m - 1, k + max(1, (m - k) // 2))
+
+    def restart(T, V):
+        theta, S = jnp.linalg.eigh(T)
+        Y = S[:, m - l_keep:].T @ V[:m]
+        return theta, Y
+
+    T = _sds((m, m), jnp.float32)
+    restart_cell = Cell(f"{arch.name}/{shape_name}[restart]", restart,
+                        (T, V), (P(), Vspec))
+
+    # (c) one k-means (Lloyd) iteration on the n×k embedding
+    def km_iter(h, C):
+        labels, dmin = assign_ref(h, C)
+        Cn = update_centroids(h, labels, k, C, how="matmul")
+        return labels, Cn, dmin.sum()
+
+    h = _sds((n, k), jnp.float32)
+    C = _sds((k, k), jnp.float32)
+    km_cell = Cell(f"{arch.name}/{shape_name}[kmeans_iter]", km_iter,
+                   (h, C), (hspec, P()))
+
+    # (d) one k-means++ seeding step
+    def kmpp_step(h, c, dist2, g):
+        from repro.core.kmeans import row_at
+
+        d2 = jnp.maximum((h * h).sum(1) - 2.0 * (h @ c) + (c * c).sum(), 0.0)
+        dist2 = jnp.minimum(dist2, d2)
+        idx = jnp.argmax(jnp.log(jnp.maximum(dist2, 1e-30)) + g)
+        return dist2, row_at(h, idx)
+
+    kmpp_cell = Cell(f"{arch.name}/{shape_name}[kmeanspp_step]", kmpp_step,
+                     (h, _sds((k,), jnp.float32), _sds((n,), jnp.float32), _sds((n,), jnp.float32)),
+                     (hspec, P(), vspec, vspec))
+
+    restarts = arch.config.fixed_restarts
+    km_iters = arch.config.fixed_kmeans_iters
+    n_steps = m + restarts * (m - l_keep)
+    return [
+        ("lanczos_step", step_cell, n_steps),
+        ("restart", restart_cell, restarts + 1),
+        ("kmeans_iter", km_cell, km_iters),
+        ("kmeanspp_step", kmpp_cell, k),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchDef, shape_name: str, rules, *, mesh=None, **kw) -> Cell:
+    sspec = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return _lm_cell(arch, sspec, rules)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, sspec, rules)
+    if arch.family == "recsys":
+        return _recsys_cell(arch, sspec, rules)
+    if arch.family == "spectral":
+        return spectral_cell(arch, sspec, rules, mesh=mesh, **kw)
+    raise ValueError(arch.family)
+
+
+def all_cells(archs) -> list:
+    out = []
+    for a in archs:
+        for s in a.shapes:
+            out.append((a, s))
+    return out

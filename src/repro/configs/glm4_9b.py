@@ -1,0 +1,36 @@
+"""glm4-9b [hf:THUDM/glm-4-9b]: 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552 — RoPE, GQA."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="glm4-9b",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_head=128,
+    d_ff=13696,
+    vocab=151552,
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    attn_chunk=2048,
+)
+
+SMOKE = TransformerConfig(
+    name="glm4-9b-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    dtype=jnp.float32,
+    attn_chunk=64,
+)
+
+ARCH = ArchDef(name="glm4-9b", family="lm", config=CONFIG, smoke_config=SMOKE,
+               sub_quadratic=False)

@@ -1,0 +1,15 @@
+"""The paper's contribution as composable JAX modules.
+
+Stage 1 (Alg. 1)   :mod:`repro.core.similarity` — sparse similarity graphs.
+Stage 2 (Alg. 2-3) :mod:`repro.core.laplacian`, :mod:`repro.core.lanczos` —
+                   normalized Laplacian + on-device restarted Lanczos.
+Stage 3 (Alg. 4-5) :mod:`repro.core.kmeans` — k-means++ / fused Lloyd.
+End-to-end         :mod:`repro.core.pipeline` (+ ``distributed_pipeline``).
+
+NOTE: ``repro.core.kmeans`` (module) contains ``kmeans`` (function) — we do
+NOT re-export the function here, to avoid shadowing the submodule.
+"""
+
+from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster  # noqa: F401
+from repro.core.lanczos import lanczos_topk  # noqa: F401
+from repro.core.kmeans import kmeanspp_init  # noqa: F401

@@ -1,0 +1,206 @@
+"""Stage 3 — parallel k-means with k-means++ seeding (paper Alg. 4-5).
+
+TPU adaptation of the paper's GPU k-means:
+
+* distance matrix via the BLAS trick ``S = ‖v‖² + ‖c‖² − 2 V Cᵀ`` (Eq. 12-16)
+  — an MXU matmul, exactly the paper's cuBLAS mapping;
+* **fused assign** (beyond-paper): :mod:`repro.kernels.kmeans_assign` computes
+  the distance tile and folds the row-argmin online in VMEM, never
+  materializing the n×k matrix in HBM (the paper's formulation is HBM-bound
+  for large n·k);
+* centroid update: the paper sorts points by label (Thrust radix sort) and
+  reduces consecutive runs.  TPU sorts are comparatively expensive, so we use
+  either ``segment_sum`` (VPU scatter-add) or a one-hot matmul ``Hᵀ V`` (MXU)
+  — selectable, benchmarked in benchmarks/bench_kmeans.py;
+* k-means++ (Alg. 5) runs fully on device: the categorical draw
+  ``P_j ∝ Dist_j²`` is a Gumbel-max over ``log Dist²`` — no host round trips.
+
+All entry points are jit-safe and shard cleanly with points over the data
+axis (centroids replicated; GSPMD turns the segment/one-hot reductions into
+a single [k,d] all-reduce per iteration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    labels: Array  # [n] int32
+    centroids: Array  # [k, d]
+    inertia: Array  # [] sum of squared distances to assigned centroid
+    iterations: Array  # []
+    shifted: Array  # [] labels changed in last iteration (0 => converged)
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    k: int
+    max_iters: int = 100
+    tol_changes: int = 0  # stop when <= this many labels change
+    init: str = "kmeans++"  # "kmeans++" | "random"
+    update: str = "matmul"  # "matmul" (MXU) | "segment" (VPU scatter)
+    assign: str = "auto"  # "auto" | "ref" | "fused"
+    fixed_iters: Optional[int] = None  # static trip count (dry-run/bench)
+    block_q: int = 1024  # fused-kernel tile sizes
+    block_k: int = 512
+
+
+# ---------------------------------------------------------------------------
+# assignment step
+# ---------------------------------------------------------------------------
+
+def assign_ref(x: Array, c: Array, x_norm: Optional[Array] = None):
+    """labels, min-dist² via the materialized distance matrix (paper Alg. 4)."""
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xn = (xf * xf).sum(1) if x_norm is None else x_norm
+    cn = (cf * cf).sum(1)
+    s = xn[:, None] + cn[None, :] - 2.0 * (xf @ cf.T)  # Eq. 12/15/16
+    labels = jnp.argmin(s, axis=1).astype(jnp.int32)
+    dmin = jnp.maximum(jnp.min(s, axis=1), 0.0)
+    return labels, dmin
+
+
+def _assign(x, c, x_norm, cfg: KMeansConfig):
+    if cfg.assign in ("fused", "auto"):
+        try:
+            from repro.kernels.kmeans_assign.ops import kmeans_assign as fused
+
+            return fused(x, c, x_norm=x_norm, block_q=cfg.block_q, block_k=cfg.block_k)
+        except Exception:
+            if cfg.assign == "fused":
+                raise
+    return assign_ref(x, c, x_norm)
+
+
+# ---------------------------------------------------------------------------
+# update step
+# ---------------------------------------------------------------------------
+
+def update_centroids(x: Array, labels: Array, k: int, prev: Array, *, how: str = "matmul"):
+    """New centroids = per-cluster means; empty clusters keep their previous
+    centroid (the paper's implementation implicitly does the same)."""
+    xf = x.astype(jnp.float32)
+    if how == "matmul":
+        h = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # [n, k]
+        sums = h.T @ xf  # MXU
+        counts = h.sum(axis=0)
+    else:
+        sums = jax.ops.segment_sum(xf, labels, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones_like(labels, jnp.float32), labels, num_segments=k)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    c = sums / safe
+    return jnp.where(counts[:, None] > 0, c, prev.astype(jnp.float32)).astype(prev.dtype)
+
+
+# ---------------------------------------------------------------------------
+# k-means++ (Alg. 5)
+# ---------------------------------------------------------------------------
+
+def row_at(x: Array, idx: Array) -> Array:
+    """x[idx] for a row-sharded x, without gathering x: a one-hot
+    contraction over the sharded axis (GSPMD: local dot + psum of d floats
+    — the dynamic-gather formulation all-gathers the whole matrix, which
+    dominated the spectral cells' collective roofline, see §Perf)."""
+    onehot = (jnp.arange(x.shape[0]) == idx).astype(jnp.float32)
+    return onehot @ x.astype(jnp.float32)
+
+
+def kmeanspp_init(x: Array, k: int, key: Array) -> Array:
+    """On-device k-means++ seeding.  O(nkd) — one fused pass per centroid."""
+    n, d = x.shape
+    xf = x.astype(jnp.float32)
+    xn = (xf * xf).sum(1)
+
+    key, sub = jax.random.split(key)
+    i0 = jax.random.randint(sub, (), 0, n)
+    c0 = row_at(xf, i0)
+
+    def d2_to(c):
+        return jnp.maximum(xn - 2.0 * (xf @ c) + (c * c).sum(), 0.0)
+
+    dist2 = d2_to(c0)
+    C = jnp.zeros((k, d), jnp.float32).at[0].set(c0)
+
+    def body(i, carry):
+        C, dist2, key = carry
+        key, sub = jax.random.split(key)
+        # Gumbel-max categorical draw with P_j ∝ dist2_j  (log 0 -> -inf ok)
+        g = jax.random.gumbel(sub, (n,), jnp.float32)
+        idx = jnp.argmax(jnp.log(jnp.maximum(dist2, 1e-30)) + g)
+        c = row_at(xf, idx)
+        C = C.at[i].set(c)
+        dist2 = jnp.minimum(dist2, d2_to(c))
+        return C, dist2, key
+
+    C, _, _ = jax.lax.fori_loop(1, k, body, (C, dist2, key))
+    return C.astype(x.dtype)
+
+
+def random_init(x: Array, k: int, key: Array) -> Array:
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    return x[idx]
+
+
+# ---------------------------------------------------------------------------
+# driver (Alg. 4)
+# ---------------------------------------------------------------------------
+
+def kmeans(x: Array, cfg: KMeansConfig, key: Array, *, init_centroids: Optional[Array] = None) -> KMeansResult:
+    n, d = x.shape
+    k = cfg.k
+    xf32 = x.astype(jnp.float32)
+    x_norm = (xf32 * xf32).sum(1)
+
+    if init_centroids is not None:
+        c0 = init_centroids
+    elif cfg.init == "kmeans++":
+        c0 = kmeanspp_init(x, k, key)
+    else:
+        c0 = random_init(x, k, key)
+
+    labels0 = jnp.full((n,), -1, jnp.int32)
+
+    def one_iter(c, labels):
+        new_labels, dmin = _assign(x, c, x_norm, cfg)
+        changed = (new_labels != labels).sum()
+        new_c = update_centroids(x, new_labels, k, c, how=cfg.update)
+        return new_c, new_labels, dmin, changed
+
+    if cfg.fixed_iters is not None:
+        def fbody(_, st):
+            c, labels, dmin, changed = st
+            return one_iter(c, labels)
+
+        c, labels, dmin, changed = jax.lax.fori_loop(
+            0, cfg.fixed_iters, fbody, (c0, labels0, jnp.zeros((n,), jnp.float32), jnp.asarray(n))
+        )
+        iters = jnp.asarray(cfg.fixed_iters)
+    else:
+        def wcond(st):
+            _, _, _, changed, it = st
+            return jnp.logical_and(changed > cfg.tol_changes, it < cfg.max_iters)
+
+        def wbody(st):
+            c, labels, dmin, _, it = st
+            c, labels, dmin, changed = one_iter(c, labels)
+            return c, labels, dmin, changed, it + 1
+
+        c, labels, dmin, changed, iters = jax.lax.while_loop(
+            wcond, wbody, (c0, labels0, jnp.zeros((n,), jnp.float32), jnp.asarray(n), jnp.asarray(0))
+        )
+
+    return KMeansResult(
+        labels=labels,
+        centroids=c.astype(x.dtype),
+        inertia=dmin.sum(),
+        iterations=iters,
+        shifted=changed,
+    )

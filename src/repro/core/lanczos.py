@@ -1,0 +1,198 @@
+"""Stage 2b — on-device restarted Lanczos eigensolver (paper Alg. 3, TPU-native).
+
+The paper drives ARPACK's implicitly-restarted Lanczos (IRLM) on the host and
+ships one vector per iteration to the GPU for the SpMV.  A per-iteration
+host↔device round trip would serialize a TPU pod, so we implement the
+restarted Lanczos itself in ``jax.lax`` control flow and keep *everything*
+on device:
+
+* **thick-restart Lanczos** (Wu & Simon 2000) — for symmetric operators this
+  is mathematically equivalent to ARPACK's symmetric IRLM (``dsaupd``), and
+  is the standard formulation for implementations without host control;
+* **full two-pass Gram-Schmidt reorthogonalization** each step (ARPACK-grade
+  robustness; also what makes the implementation tolerant of the restart's
+  non-tridiagonal projected matrix — we simply measure the full coefficient
+  vector ``c = V·(A v_j)`` and record it as row ``j`` of the projected
+  matrix ``T``, so bookkeeping is correct by construction);
+* the m×m projected eigenproblem is solved with ``jnp.linalg.eigh`` on
+  device — it is tiny (m ≈ 2k) relative to the n-dimensional work.
+
+ARPACK's *reverse-communication interface* survives as a software contract:
+``matvec`` is an arbitrary callable, so any operator representation (COO
+segment-sum, BlockELL Pallas kernel, shard_map-distributed SpMV) plugs in —
+exactly the flexibility the paper gets from RCI, minus the PCIe copies.
+
+Complexities match the paper's Eq. (10): per restart O(m³) (eigh)
++ O(n m²) (reorth + basis rotation) + O(nnz·m) (matvecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LanczosResult(NamedTuple):
+    eigenvalues: Array  # [k]  descending (for which="LA")
+    eigenvectors: Array  # [n, k]
+    residuals: Array  # [k]  |beta_m * s_{m,i}| per returned pair
+    restarts: Array  # []   restart count actually executed
+    converged: Array  # []   bool
+
+
+@dataclasses.dataclass(frozen=True)
+class LanczosConfig:
+    k: int  # wanted eigenpairs
+    m: int  # Krylov basis size (ARPACK's ncv), > k
+    max_restarts: int = 100
+    tol: float = 1e-6
+    which: str = "LA"  # "LA": largest algebraic (the paper's D^{-1}W case)
+    fixed_restarts: Optional[int] = None  # static count (dry-run / benchmark)
+    dtype: jnp.dtype = jnp.float32
+
+
+def default_config(k: int, n: int, **kw) -> LanczosConfig:
+    # ARPACK's guidance: ncv >= 2k; cap at n and keep a floor for tiny k.
+    m = min(n, max(2 * k, k + 16))
+    return LanczosConfig(k=k, m=m, **kw)
+
+
+def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
+    """Random unit vector orthogonal to the (zero-padded) basis rows —
+    invariant-subspace escape hatch (ARPACK does the same on breakdown)."""
+    r = jax.random.normal(key, v.shape, v.dtype)
+    r = r - basis.T @ (basis @ r)
+    return r / jnp.maximum(jnp.linalg.norm(r), 1e-30)
+
+
+def lanczos_topk(
+    matvec: Callable[[Array], Array],
+    n: int,
+    cfg: LanczosConfig,
+    *,
+    v0: Optional[Array] = None,
+    key: Optional[Array] = None,
+) -> LanczosResult:
+    """Top-k eigenpairs of the symmetric operator behind ``matvec``.
+
+    ``matvec`` must map an ``[n]`` vector to an ``[n]`` vector and be
+    jit-traceable (it may itself contain shard_map collectives).
+    """
+    k, m = cfg.k, cfg.m
+    assert 0 < k < m <= n, (k, m, n)
+    key = jax.random.PRNGKey(0) if key is None else key
+    f32 = jnp.float32
+
+    if v0 is None:
+        v0 = jax.random.normal(key, (n,), f32)
+    v0 = v0.astype(f32)
+    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+
+    sign = 1.0 if cfg.which == "LA" else -1.0  # "SA" negates the spectrum
+
+    def step(j, carry):
+        """One Lanczos step: expand basis row j+1, record T row/col j."""
+        V, T, key = carry
+        w = matvec(V[j]).astype(f32) * sign
+        c = V @ w  # [m+1] couplings (zero rows -> zero coeffs)
+        T = T.at[j, :].set(c)
+        T = T.at[:, j].set(c)
+        w = w - V.T @ c
+        c2 = V @ w  # second Gram-Schmidt pass
+        w = w - V.T @ c2
+        beta = jnp.linalg.norm(w)
+        key, sub = jax.random.split(key)
+        v_next = jnp.where(
+            beta > 1e-10, w / jnp.maximum(beta, 1e-30), _orthonormal_against(w, V, sub)
+        )
+        V = V.at[j + 1].set(v_next)
+        T = T.at[j + 1, j].set(beta)
+        T = T.at[j, j + 1].set(beta)
+        return V, T, key
+
+    def run_cycle(V, T, l, key):
+        """Steps l..m-1, then Ritz extraction + thick restart state."""
+        V, T, key = jax.lax.fori_loop(l, m, step, (V, T, key))
+        beta_m = T[m, m - 1]
+        theta, S = jnp.linalg.eigh(T[:m, :m])  # ascending
+        # top-k live in the last k columns
+        res = jnp.abs(beta_m * S[m - 1, :])
+        scale = jnp.maximum(jnp.max(jnp.abs(theta)), 1e-12)
+        conv = res[m - k :] <= cfg.tol * scale
+        n_conv = conv.sum()
+
+        # ---- thick restart: keep l_keep top Ritz pairs + residual vector
+        l_keep = min(m - 1, k + max(1, (m - k) // 2))
+        keep = slice(m - l_keep, m)
+        Y = (S[:, keep].T @ V[:m]).astype(f32)  # [l_keep, n] Ritz vectors
+        V_new = jnp.zeros_like(V)
+        V_new = V_new.at[:l_keep].set(Y)
+        V_new = V_new.at[l_keep].set(V[m])
+        h = beta_m * S[m - 1, keep]
+        T_new = jnp.zeros_like(T)
+        T_new = T_new.at[jnp.arange(l_keep), jnp.arange(l_keep)].set(theta[keep])
+        T_new = T_new.at[l_keep, :l_keep].set(h)
+        T_new = T_new.at[:l_keep, l_keep].set(h)
+        return (V_new, T_new, key, theta, S, V, res), n_conv, l_keep
+
+    V0 = jnp.zeros((m + 1, n), f32).at[0].set(v0)
+    T0 = jnp.zeros((m + 1, m + 1), f32)
+
+    l_keep_static = min(m - 1, k + max(1, (m - k) // 2))
+
+    # --- restart control ----------------------------------------------------
+    # fori_loop needs static bounds and the first cycle (l=0) differs from
+    # steady-state cycles (l=l_keep), so we peel the first cycle and then
+    # loop the steady-state cycle (while_loop in production; fori_loop with a
+    # static trip count for the dry-run so cost_analysis sees exact op counts).
+    def first_cycle(V, T, key):
+        return run_cycle(V, T, 0, key)
+
+    def steady_cycle(V, T, key):
+        return run_cycle(V, T, l_keep_static, key)
+
+    out, n_conv, _ = first_cycle(V0, T0, key)
+
+    if cfg.fixed_restarts is not None:
+        # static restart count — used by the dry-run so cost_analysis sees an
+        # exact, analyzable op count (no while loop).
+        def fbody(_, st):
+            (V, T, key, *_), _ = st
+            o, nc, _ = steady_cycle(V, T, key)
+            return o, nc
+
+        (V, T, key, theta, S, V_old, res), n_conv = jax.lax.fori_loop(
+            0, cfg.fixed_restarts, fbody, (out, n_conv)
+        )
+        restarts = jnp.asarray(1 + cfg.fixed_restarts)
+    else:
+        def wcond(st):
+            _, it, nc = st
+            return jnp.logical_and(it < cfg.max_restarts, nc < k)
+
+        def wbody(st):
+            (V, T, key, *_), it, _ = st
+            o, nc, _ = steady_cycle(V, T, key)
+            return o, it + 1, nc
+
+        (V, T, key, theta, S, V_old, res), restarts, n_conv = jax.lax.while_loop(
+            wcond, wbody, (out, jnp.asarray(1), n_conv)
+        )
+
+    # --- extract final top-k pairs from the last completed cycle ----------
+    topk = slice(m - k, m)
+    vals = theta[topk][::-1] * sign  # descending, undo "SA" negation
+    U = (S[:, topk].T @ V_old[:m]).astype(cfg.dtype)  # [k, n]
+    U = U[::-1].T  # [n, k] descending order
+    res_k = res[topk][::-1]
+    return LanczosResult(
+        eigenvalues=vals.astype(cfg.dtype),
+        eigenvectors=U,
+        residuals=res_k.astype(cfg.dtype),
+        restarts=restarts,
+        converged=n_conv >= k,
+    )

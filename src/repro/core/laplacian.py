@@ -1,0 +1,60 @@
+"""Stage 2a — normalized graph Laplacian operators (paper Alg. 2).
+
+The paper forms ``D⁻¹W`` on the GPU (ScaleElements kernel) and feeds its
+largest-k eigenproblem to ARPACK.  We use the similarity-transformed
+symmetric form ``A = D^{-1/2} W D^{-1/2}`` (identical spectrum; eigenvectors
+map by ``u_rw = D^{-1/2} u_sym``), which admits 3-term Lanczos — see
+DESIGN.md §8.  Isolated vertices (D_ii = 0) get zero rows, matching the
+paper's assumption that they are removed / inert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import COO
+from repro.sparse.ops import degrees, normalize_rw, normalize_sym
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NormalizedGraph:
+    """Pre-normalized operator bundle consumed by the eigensolver."""
+
+    adj_sym: COO  # D^{-1/2} W D^{-1/2}
+    deg: Array  # D_ii
+    inv_sqrt_deg: Array  # D_ii^{-1/2} (0 where isolated)
+
+
+jax.tree_util.register_dataclass(NormalizedGraph, ["adj_sym", "deg", "inv_sqrt_deg"], [])
+
+
+def normalized_graph(w: COO) -> NormalizedGraph:
+    d = degrees(w)
+    isd = jnp.where(d > 0, jax.lax.rsqrt(jnp.maximum(d.astype(jnp.float32), 1e-30)), 0.0)
+    return NormalizedGraph(adj_sym=normalize_sym(w, d), deg=d, inv_sqrt_deg=isd.astype(w.val.dtype))
+
+
+def random_walk_matrix(w: COO) -> COO:
+    """The paper's exact operator D⁻¹W (kept for parity tests)."""
+    return normalize_rw(w)
+
+
+def smallest_laplacian_eigs_from_adj(theta: Array) -> Array:
+    """Largest-k eigenvalues θ of A = D^{-1/2}WD^{-1/2} ↔ smallest-k
+    eigenvalues 1-θ of L_sym = I − A (and of L_rw).  Pure bookkeeping."""
+    return 1.0 - theta
+
+
+def embed_rows(v_sym: Array, inv_sqrt_deg: Array, *, row_normalize: bool = True) -> Array:
+    """Map symmetric-form eigenvectors to the paper's D⁻¹W eigenvectors and
+    row-normalize (Ng-Jordan-Weiss) for Stage 3 k-means."""
+    h = v_sym * inv_sqrt_deg[:, None]
+    if row_normalize:
+        nrm = jnp.sqrt((h * h).sum(axis=1, keepdims=True))
+        h = h / jnp.maximum(nrm, 1e-12)
+    return h

@@ -1,0 +1,152 @@
+"""Stage 1 — sparse similarity-graph construction (paper Alg. 1).
+
+Given data points ``X ∈ R^{n×d}`` and a neighborhood edge list
+``E ∈ N^{nnz×2}`` (the paper's ε-distance pairs, e.g. voxels within 4 mm),
+compute the per-edge similarity and emit a COO graph.  The paper maps one
+CUDA thread per edge; on TPU the same computation is a batched gather +
+row-wise contraction that the VPU vectorizes — we additionally chunk it with
+``jax.lax.map`` so the nnz×d gather working set stays HBM-friendly.
+
+Also provides host-side neighborhood builders (ε-ball / kNN via blocked
+brute force) used by the data pipeline and the NequIP/Equiformer radius
+graphs — the paper assumes E is given; a real framework has to build it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import COO, coo_from_edges
+
+Array = jax.Array
+
+Measure = Literal["cosine", "cross_correlation", "exp_decay"]
+
+
+def _center_and_norms(x: Array, measure: Measure) -> Tuple[Array, Array]:
+    """Paper Alg. 1 steps 4-5: per-point mean removal + L2 norms."""
+    if measure == "cross_correlation":
+        x = x - x.mean(axis=1, keepdims=True)
+    norm = jnp.sqrt((x * x).sum(axis=1))
+    return x, norm
+
+
+def edge_similarities(
+    x: Array,
+    edges: Array,
+    *,
+    measure: Measure = "cross_correlation",
+    sigma: float = 1.0,
+    chunk: int = 65536,
+) -> Array:
+    """Similarity value per edge (paper Alg. 1 step 6).
+
+    x     : [n, d] data points.
+    edges : [nnz, 2] int32 endpoint indices.
+    chunk : edges processed per lax.map step (bounds the gather working set).
+    """
+    x = x.astype(jnp.float32)
+    if measure in ("cosine", "cross_correlation"):
+        xc, norm = _center_and_norms(x, measure)
+
+        def body(e):
+            xi = xc[e[:, 0]]
+            xj = xc[e[:, 1]]
+            num = (xi * xj).sum(axis=1)
+            den = norm[e[:, 0]] * norm[e[:, 1]]
+            return num / jnp.maximum(den, 1e-12)
+
+    elif measure == "exp_decay":
+
+        def body(e):
+            diff = x[e[:, 0]] - x[e[:, 1]]
+            return jnp.exp(-(diff * diff).sum(axis=1) / (2.0 * sigma**2))
+
+    else:  # pragma: no cover - guarded by Literal
+        raise ValueError(f"unknown measure {measure}")
+
+    nnz = edges.shape[0]
+    if nnz <= chunk:
+        return body(edges)
+    # pad to a multiple of chunk, map, then slice back
+    pad = (-nnz) % chunk
+    ep = jnp.concatenate([edges, jnp.zeros((pad, 2), edges.dtype)]) if pad else edges
+    out = jax.lax.map(body, ep.reshape(-1, chunk, 2))
+    return out.reshape(-1)[:nnz]
+
+
+def build_similarity_graph(
+    x: np.ndarray,
+    edges: np.ndarray,
+    n: int | None = None,
+    *,
+    measure: Measure = "cross_correlation",
+    sigma: float = 1.0,
+    symmetrize: bool = True,
+    clip_negative: bool = True,
+) -> COO:
+    """End-to-end Stage 1: edge similarities → row-sorted COO (host wrapper).
+
+    ``symmetrize`` mirrors each (i, j) pair to (j, i) — the paper's edge list
+    contains unordered pairs.  ``clip_negative`` drops negative correlations
+    (a similarity graph needs non-negative weights for D to be positive).
+    """
+    n = int(x.shape[0]) if n is None else n
+    edges = np.asarray(edges, np.int32)
+    vals = np.asarray(jax.jit(functools.partial(edge_similarities, measure=measure, sigma=sigma))(
+        jnp.asarray(x), jnp.asarray(edges)))
+    if clip_negative:
+        keep = vals > 0
+        edges, vals = edges[keep], vals[keep]
+    r, c = edges[:, 0], edges[:, 1]
+    if symmetrize:
+        mask = r != c  # never duplicate self loops
+        r = np.concatenate([r, c[mask]])
+        c2 = np.concatenate([c, edges[:, 0][mask]])
+        vals = np.concatenate([vals, vals[mask]])
+        c = c2
+    return coo_from_edges(r, c, vals, (n, n), sort=True, sum_duplicates=True)
+
+
+# ---------------------------------------------------------------------------
+# Neighborhood builders (host-side; the paper assumes E is given)
+# ---------------------------------------------------------------------------
+
+def eps_neighbors(points: np.ndarray, eps: float, *, block: int = 2048) -> np.ndarray:
+    """All pairs (i < j) with ‖p_i − p_j‖ ≤ eps, by blocked brute force."""
+    pts = np.asarray(points, np.float32)
+    n = pts.shape[0]
+    out = []
+    for i0 in range(0, n, block):
+        pi = pts[i0 : i0 + block]
+        for j0 in range(i0, n, block):
+            pj = pts[j0 : j0 + block]
+            d2 = ((pi[:, None, :] - pj[None, :, :]) ** 2).sum(-1)
+            ii, jj = np.nonzero(d2 <= eps * eps)
+            gi, gj = ii + i0, jj + j0
+            keep = gi < gj
+            out.append(np.stack([gi[keep], gj[keep]], axis=1))
+    return np.concatenate(out, axis=0) if out else np.zeros((0, 2), np.int64)
+
+
+def knn_edges(points: np.ndarray, k: int, *, block: int = 2048) -> np.ndarray:
+    """Symmetric kNN pairs (i, j) — j among the k nearest of i (i ≠ j)."""
+    pts = np.asarray(points, np.float32)
+    n = pts.shape[0]
+    nrm = (pts * pts).sum(1)
+    rows = []
+    for i0 in range(0, n, block):
+        pi = pts[i0 : i0 + block]
+        d2 = nrm[i0 : i0 + block, None] + nrm[None, :] - 2.0 * pi @ pts.T
+        idx = np.argpartition(d2, kth=min(k + 1, n - 1), axis=1)[:, : k + 1]
+        for li in range(pi.shape[0]):
+            gi = i0 + li
+            for j in idx[li]:
+                if j != gi:
+                    rows.append((gi, int(j)))
+    e = np.asarray(rows, np.int64)
+    return e

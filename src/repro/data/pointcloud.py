@@ -1,0 +1,37 @@
+"""DTI-like point clouds (paper §V-A): spatial points with d-dim
+connectivity profiles + an ε-distance edge list — the Stage-1 input."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.similarity import eps_neighbors
+
+
+def dti_like_pointcloud(
+    n_points: int,
+    d_profile: int = 90,
+    n_regions: int = 8,
+    *,
+    eps: float = 1.5,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (positions [n,3], profiles [n,d], edges [m,2], region labels).
+
+    Points fill a cubic lattice patch (2 mm voxels in the paper); each
+    belongs to a latent region whose mean connectivity profile it inherits
+    with noise — so cross-correlation clustering can recover the regions.
+    """
+    rng = np.random.default_rng(seed)
+    side = int(np.ceil(n_points ** (1 / 3)))
+    grid = np.stack(np.meshgrid(*[np.arange(side)] * 3, indexing="ij"), -1).reshape(-1, 3)
+    pos = grid[:n_points].astype(np.float32)
+    # latent regions = k-means-ish Voronoi of random centers
+    centers = rng.uniform(0, side, (n_regions, 3)).astype(np.float32)
+    d2 = ((pos[:, None, :] - centers[None]) ** 2).sum(-1)
+    region = d2.argmin(1)
+    base = rng.normal(size=(n_regions, d_profile)).astype(np.float32) * 3
+    profiles = base[region] + rng.normal(size=(n_points, d_profile)).astype(np.float32)
+    edges = eps_neighbors(pos, eps)
+    return pos, profiles, edges, region

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target; validated
+              with interpret=True on CPU),
+  ops.py    — the jit'd public wrapper with shape padding + fallbacks,
+  ref.py    — the pure-jnp oracle the tests assert against.
+
+Kernels:
+  kmeans_assign — fused pairwise-distance + online argmin (Stage 3 hot op).
+  ell_spmv      — blocked-ELL SpMV (Stage 2 hot op).
+"""

@@ -1,0 +1,60 @@
+"""Blocked-ELL SpMV Pallas kernel (TPU target) — Stage-2 hot op.
+
+cuSPARSE's CSR SpMV is a warp-per-row gather machine; TPUs have no warp
+shuffles and hate per-element gathers from HBM.  The TPU-native rethink
+(DESIGN.md §2) pads rows to a fixed ELL width inside row blocks so that
+
+* the column-index and value arrays become *dense* [rows, width] tiles that
+  stream HBM→VMEM with perfect stride;
+* the only irregular access left is the VMEM-resident gather ``x[cols]``,
+  which the VPU can service (x is staged whole into VMEM — the kernel's
+  stated domain is n ≤ ~3M fp32, ≈12 MB, inside a v5e core's 16 MB; larger
+  graphs take the segment-sum path or the distributed row-block SpMV, which
+  shrinks per-core n by the data-axis size);
+* the multiply-add reduces along the width axis entirely in registers.
+
+Grid: 1-D over row blocks.  Per step the working set is
+``block_rows·width·(4+4)`` bytes of cols/vals + the resident x — with the
+default block_rows=1024, width≤128 that is ≈1 MB + x.
+
+Heavy-tail rows spill to a COO tail handled by the wrapper (HYB layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cols_ref, vals_ref, y_ref):
+    cols = cols_ref[...]  # [br, w] int32
+    vals = vals_ref[...]  # [br, w] f32
+    x = x_ref[...]  # [n] f32 (VMEM resident)
+    gathered = jnp.take(x, cols, axis=0, fill_value=0.0)  # VPU gather
+    y_ref[...] = (vals.astype(jnp.float32) * gathered).sum(axis=1)
+
+
+def ell_spmv_pallas(
+    x: jax.Array,  # [n] f32
+    cols: jax.Array,  # [n_rows_padded, width] int32
+    vals: jax.Array,  # [n_rows_padded, width] f32
+    *,
+    block_rows: int = 1024,
+    interpret: bool = False,
+):
+    n_rows, width = cols.shape
+    assert n_rows % block_rows == 0, (n_rows, block_rows)
+    n = x.shape[0]
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: whole vector resident
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        interpret=interpret,
+    )(x, cols, vals)

@@ -1,0 +1,48 @@
+"""Public jit'd wrapper: BlockELL(+tail) SpMV with backend dispatch.
+
+``spmv(m: BlockELL, x)`` — the drop-in matvec for the Lanczos eigensolver.
+The Pallas kernel covers the ELL body; the COO overflow tail (heavy-degree
+rows beyond the ELL width) goes through segment-sum and is added in.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmv.kernel import ell_spmv_pallas
+from repro.kernels.ell_spmv.ref import ell_spmv_ref
+from repro.sparse.formats import BlockELL
+from repro.sparse.ops import spmv_coo
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "block_rows"))
+def ell_spmv(
+    m: BlockELL,
+    x: jax.Array,
+    *,
+    impl: str = "auto",  # "auto" | "pallas" | "ref"
+    interpret: bool | None = None,
+    block_rows: int = 1024,
+):
+    nb, br, w = m.cols.shape
+    n_rows_padded = nb * br
+    cols2d = m.cols.reshape(n_rows_padded, w)
+    vals2d = m.vals.reshape(n_rows_padded, w)
+
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu and not interpret):
+        body = ell_spmv_ref(x, cols2d, vals2d)
+    else:
+        if interpret is None:
+            interpret = not on_tpu
+        blk = block_rows
+        while n_rows_padded % blk:
+            blk //= 2
+        body = ell_spmv_pallas(
+            x.astype(jnp.float32), cols2d, vals2d, block_rows=max(blk, 1), interpret=interpret
+        )
+    y = body[: m.shape[0]]
+    y = y + spmv_coo(m.tail, x).astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the BlockELL SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """y[r] = Σ_w vals[r, w] · x[cols[r, w]]  (padding slots carry val = 0)."""
+    gathered = vals.astype(jnp.float32) * x.astype(jnp.float32)[cols]
+    return gathered.sum(axis=1)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused k-means assignment kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jax.Array, c: jax.Array, x_norm: jax.Array | None = None):
+    """labels, min-dist² — materializes the full n×k matrix (paper Alg. 4)."""
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xn = (xf * xf).sum(1) if x_norm is None else x_norm.astype(jnp.float32)
+    cn = (cf * cf).sum(1)
+    s = xn[:, None] + cn[None, :] - 2.0 * (xf @ cf.T)
+    return jnp.argmin(s, axis=1).astype(jnp.int32), jnp.maximum(jnp.min(s, axis=1), 0.0)

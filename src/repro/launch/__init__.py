@@ -1,0 +1,1 @@
+"""Launcher layer: production mesh, sharding rules, dry-run, train/serve."""

@@ -1,0 +1,241 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production mesh and extract the roofline terms.
+
+The first two statements set XLA_FLAGS before ANY other import (jax locks
+the device count on first init) — do not move them.
+
+Two passes per cell (see configs/cells.py for why):
+  memory pass — the production (rolled-loop) lowering; its
+                ``memory_analysis()`` proves the step fits per-device HBM;
+  cost pass   — unrolled / component lowerings whose ``cost_analysis()`` is
+                exact (XLA counts loop bodies once, so rolled numbers
+                undercount); LM cells use a 2-point linear fit in depth.
+
+Usage:
+    python -m repro.launch.dryrun --cell glm4-9b/train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh single --out reports/dryrun
+    python -m repro.launch.dryrun --all --mesh multi
+    python -m repro.launch.dryrun --cell spectral/dblp --variant shard_map
+"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_EXTRA", "") + " --xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.configs.cells import (
+    build_cell,
+    gnn_cost_cell,
+    lm_cost_cells,
+    spectral_component_cells,
+)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.launch import sharding as shd
+
+
+def _named(mesh, spec_tree, shape_tree):
+    def to_ns(spec):
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(
+        to_ns, spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None
+    )
+
+
+def model_flops_for(arch, shape_name: str) -> float:
+    sspec = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return rl.lm_model_flops(arch.config, shape_name, sspec.dims)
+    if arch.family == "spectral":
+        return rl.spectral_model_flops(
+            sspec.dims, arch.config.fixed_restarts, arch.config.fixed_kmeans_iters
+        )
+    if arch.family == "recsys":
+        return rl.recsys_model_flops(arch.config, shape_name, sspec.dims)
+    from repro.configs.cells import gnn_shape_config, gnn_batch_shapes
+
+    cfg = gnn_shape_config(arch, sspec)
+    batch, _ = gnn_batch_shapes(arch, sspec, {})
+    return rl.gnn_model_flops(arch.name, cfg, sspec.dims,
+                              batch.node_feat.shape[0], batch.edge_src.shape[0])
+
+
+def lower_and_measure(cell, mesh, rules):
+    """Compile one cell; return (metrics dict, memory dict, compile seconds)."""
+    in_sh = tuple(_named(mesh, s, a) for s, a in zip(cell.in_specs, cell.args))
+    t0 = time.monotonic()
+    with shd.axis_rules(rules, mesh):
+        jitted = jax.jit(cell.fn, in_shardings=in_sh, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    dt = time.monotonic() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = rl.collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_size_gb": ma.argument_size_in_bytes / 2**30,
+        "output_size_gb": ma.output_size_in_bytes / 2**30,
+        "temp_size_gb": ma.temp_size_in_bytes / 2**30,
+        "total_hbm_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes) / 2**30,
+    }
+    metrics = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+    return metrics, mem, dt
+
+
+def _coll_sum(coll):
+    return float(sum(coll.values()))
+
+
+def _fit_linear(m2, m4, L_full):
+    """total(L) = const + L·slope from measurements at L=2, 4."""
+    out = {}
+    for key in ("flops", "bytes"):
+        slope = (m4[key] - m2[key]) / 2.0
+        const = m2[key] - 2.0 * slope
+        out[key] = max(const + L_full * slope, 0.0)
+    coll = {}
+    for k in m2["coll"]:
+        slope = (m4["coll"][k] - m2["coll"][k]) / 2.0
+        const = m2["coll"][k] - 2.0 * slope
+        coll[k] = max(const + L_full * slope, 0.0)
+    out["coll"] = coll
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             variant: str = "gspmd", gather_dtype: str | None = None,
+             skip_cost_pass: bool = False) -> dict:
+    arch = ARCHS[arch_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules_for_mesh(mesh)
+    gdt = {"bf16": jax.numpy.bfloat16, None: None}[gather_dtype]
+    kw = {"variant": variant, "gather_dtype": gdt} if arch.family == "spectral" else {}
+    cell = build_cell(arch, shape_name, rules, mesh=mesh, **kw)
+    n_chips = mesh.devices.size
+    result = {"cell": cell.name, "mesh": mesh_kind, "chips": n_chips}
+    if cell.skip:
+        result["skip"] = cell.skip
+        print(f"[{cell.name} @ {mesh_kind}] {cell.skip}")
+        return result
+
+    # ---- memory pass (production lowering)
+    base, mem, t_mem = lower_and_measure(cell, mesh, rules)
+    print(f"[{cell.name} @ {mesh_kind}] memory pass: {json.dumps(mem)} ({t_mem:.0f}s)")
+    result["memory_analysis"] = mem
+    result["raw_rolled"] = base
+
+    # ---- cost pass
+    cost = base
+    t_cost = 0.0
+    if not skip_cost_pass:
+        if arch.family == "lm":
+            ms = {}
+            for L, ccell in lm_cost_cells(arch, shape_name, rules):
+                m, _, dt = lower_and_measure(ccell, mesh, rules)
+                t_cost += dt
+                ms[L] = m
+            cost = _fit_linear(ms[2], ms[4], arch.config.n_layers)
+            result["cost_fit"] = {str(L): m for L, m in ms.items()}
+        elif arch.family == "gnn":
+            ccell = gnn_cost_cell(arch, shape_name, rules)
+            if ccell is not None:
+                cost, _, t_cost = lower_and_measure(ccell, mesh, rules)
+        elif arch.family == "spectral":
+            comps = spectral_component_cells(arch, shape_name, rules, mesh=mesh,
+                                             variant=variant, gather_dtype=gdt)
+            total = {"flops": 0.0, "bytes": 0.0,
+                     "coll": {k: 0.0 for k in base["coll"]}}
+            detail = {}
+            for label, ccell, trips in comps:
+                m, _, dt = lower_and_measure(ccell, mesh, rules)
+                t_cost += dt
+                detail[label] = {"per_call": m, "trips": trips}
+                total["flops"] += m["flops"] * trips
+                total["bytes"] += m["bytes"] * trips
+                for k in total["coll"]:
+                    total["coll"][k] += m["coll"][k] * trips
+            # eigh is an un-costed LAPACK custom call: add ~10 m^3 analytic
+            k_ = arch.shapes[shape_name].dims["k"]
+            m_ = 2 * k_
+            total["flops"] += 10.0 * m_**3 * (arch.config.fixed_restarts + 1) / n_chips
+            cost = total
+            result["spectral_components"] = detail
+
+    report = rl.analyze_raw(
+        cell.name, mesh_kind, n_chips,
+        flops_dev=cost["flops"], bytes_dev=cost["bytes"], coll_by_kind=cost["coll"],
+        model_flops_total=model_flops_for(arch, shape_name),
+        mem_gb=mem["total_hbm_gb"], compile_s=t_mem + t_cost,
+    )
+    print(f"[{cell.name} @ {mesh_kind}] roofline: compute={report.compute_s:.4f}s "
+          f"memory={report.memory_s:.4f}s collective={report.collective_s:.4f}s "
+          f"bottleneck={report.bottleneck} useful_ratio={report.useful_ratio:.3f}")
+    result.update(dataclasses.asdict(report))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch/shape, e.g. glm4-9b/train_4k")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch", help="run all shapes of one arch")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--variant", default="gspmd", help="spectral matvec engine")
+    ap.add_argument("--gather-dtype", default=None)
+    ap.add_argument("--skip-cost-pass", action="store_true",
+                    help="memory/compile check only (multi-pod sweep)")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args(argv)
+
+    todo = []
+    if args.cell:
+        a, s = args.cell.split("/", 1)
+        todo.append((a, s))
+    elif args.arch:
+        todo += [(args.arch, s) for s in ARCHS[args.arch].shapes]
+    elif args.all:
+        for a in ARCHS.values():
+            todo += [(a.name, s) for s in a.shapes]
+    else:
+        ap.error("one of --cell/--arch/--all required")
+
+    os.makedirs(os.path.join(args.out, args.mesh), exist_ok=True)
+    failures = 0
+    for arch_name, shape_name in todo:
+        tag = f"{arch_name}__{shape_name}"
+        if args.variant != "gspmd":
+            tag += f"__{args.variant}" + (f"_{args.gather_dtype}" if args.gather_dtype else "")
+        path = os.path.join(args.out, args.mesh, tag + ".json")
+        try:
+            res = run_cell(arch_name, shape_name, args.mesh,
+                           variant=args.variant, gather_dtype=args.gather_dtype,
+                           skip_cost_pass=args.skip_cost_pass)
+        except Exception as e:  # a failing cell is a bug: record + continue
+            traceback.print_exc()
+            res = {"cell": f"{arch_name}/{shape_name}", "mesh": args.mesh,
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"dry-run finished: {len(todo) - failures}/{len(todo)} cells OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2):
+    """Tiny mesh for CPU multi-device tests (8 host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def rules_for_mesh(mesh, base=None):
+    """Filter logical-axis rules to the axes this mesh actually has."""
+    from repro.launch.sharding import DEFAULT_RULES
+
+    base = dict(DEFAULT_RULES if base is None else base)
+    names = set(mesh.axis_names)
+    out = {}
+    for k, v in base.items():
+        if v is None:
+            out[k] = None
+        elif isinstance(v, tuple):
+            kept = tuple(a for a in v if a in names)
+            out[k] = kept if kept else None
+        else:
+            out[k] = v if v in names else None
+    return out

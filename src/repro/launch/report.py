@@ -1,0 +1,56 @@
+"""Build the EXPERIMENTS.md roofline tables from reports/dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--out reports/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir: str, mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        rows.append(json.load(open(path)))
+    return rows
+
+
+def fmt_row(r) -> str:
+    cell = r["cell"]
+    if "skip" in r:
+        return f"| {cell} | — | — | — | — | SKIP | {r['skip'].split(':')[0]} | — |"
+    if "error" in r:
+        return f"| {cell} | — | — | — | — | ERROR | {r['error'][:60]} | — |"
+    bt = {"compute": "**C**", "memory": "**M**", "collective": "**X**"}[r["bottleneck"]]
+    return (
+        f"| {cell} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+        f"| {bt} | {r['useful_ratio']:.3f} | {r['memory_per_device_gb']:.1f} | "
+        f"{r['coll_bytes_dev']/1e9:.2f} |"
+    )
+
+
+HEADER = (
+    "| cell | compute s | memory s | collective s | bottleneck | useful ratio "
+    "| HBM GB/dev | coll GB/dev |\n|---|---|---|---|---|---|---|---|"
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    rows = load(args.out, args.mesh)
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    ok = sum(1 for r in rows if "error" not in r and "skip" not in r)
+    sk = sum(1 for r in rows if "skip" in r)
+    er = sum(1 for r in rows if "error" in r)
+    print(f"\n{ok} compiled, {sk} skipped (assignment rule), {er} errors")
+
+
+if __name__ == "__main__":
+    main()

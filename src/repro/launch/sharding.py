@@ -1,0 +1,122 @@
+"""Logical-axis sharding (MaxText-style) shared by all models.
+
+Models annotate activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); the launcher installs a rule set
+mapping logical names to mesh axes.  With no rules installed (unit tests,
+single-device smoke runs) annotation is the identity, so model code never
+depends on a mesh being present.
+
+Parameter trees get PartitionSpecs the same way: init functions tag each leaf
+with logical axes via :func:`logical_spec`, and :func:`to_partition_specs`
+resolves the tags against the active rules.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicate)
+Rules = Dict[str, Optional[str | Tuple[str, ...]]]
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Rules = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "points": ("pod", "data"),
+    # tensor-parallel axes
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,  # GQA: kv head count < model axis -> replicate
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "table_rows": "model",  # recsys embedding tables: row (hash) sharded
+    "feat": None,
+    # equivariant-GNN irrep features: channel multiplicity over the TP axis
+    # (node features at l_max=6 × C=128 are too large to gather unsharded)
+    "channels": "model",
+    "seq": None,
+    # KV caches shard their sequence dim over the TP axis (GQA head counts
+    # are below the TP degree, so heads can't shard; sequence can — decode
+    # attention then runs sequence-parallel with small score/PV all-reduces)
+    "kv_seq": "model",
+    "candidates": ("pod", "data"),
+    "clusters": None,
+}
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Rules, mesh=None):
+    """Install logical→mesh axis rules (and optionally the mesh) for model code."""
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev_r
+        _state.mesh = prev_m
+
+
+def resolve(logical_axes: Sequence[Optional[str]], rules: Optional[Rules] = None) -> P:
+    rules = current_rules() if rules is None else rules
+    if rules is None:
+        return P()
+    out = []
+    for ax in logical_axes:
+        if ax is None:
+            out.append(None)
+        else:
+            out.append(rules.get(ax))
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes; identity when no rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = resolve(logical_axes, rules)
+    mesh = current_mesh()
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec)
+        )
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter logical specs
+# ---------------------------------------------------------------------------
+
+class logical_spec(tuple):
+    """A tuple of logical axis names tagged onto a param leaf's metadata tree."""
+
+
+def to_partition_specs(logical_tree, rules: Rules):
+    """Map a pytree of ``logical_spec`` tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda ls: resolve(ls, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, logical_spec),
+    )

@@ -1,0 +1,12 @@
+"""Model zoo: the 10 assigned architectures as selectable configs.
+
+Families:
+  transformer.py — dense LMs (glm4-9b, qwen2-7b, qwen3-0.6b) + MoE LMs
+                   (granite-moe-3b-a800m, olmoe-1b-7b) via moe.py
+  gnn/           — gcn-cora, pna, nequip, equiformer-v2
+  recsys.py      — autoint (+ EmbeddingBag substrate)
+
+Every model is a pure-function pair (init, apply) over nested-dict params,
+with PartitionSpec rules for the production mesh and ``input_specs`` stand-in
+builders consumed by the dry-run.  See repro/configs for the registry.
+"""

@@ -1,0 +1,186 @@
+"""Shared model-layer substrate: norms, rotary embeddings, attention.
+
+Pure functions over nested-dict param trees.  Initializers take explicit
+PRNG keys; ``apply`` functions never allocate parameters.  Attention ships
+two execution paths:
+
+* :func:`flash_attention` — blockwise online-softmax attention
+  (``lax.scan`` over KV chunks, fp32 running max/denominator).  This is what
+  makes 32k-token prefill *fit*: the S×S score matrix is never materialized.
+* :func:`decode_attention` — single-query attention against a KV cache.
+
+Both support GQA (n_kv_heads < n_heads) natively via head grouping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * s
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, g: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layernorm(x: Array, g: Array, b: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., seq, n_heads, d_head]; positions: [..., seq] int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # [d_head/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: Array,  # [B, Sq, H, dh]
+    k: Array,  # [B, Sk, Hkv, dh]
+    v: Array,  # [B, Sk, Hkv, dh]
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> Array:
+    """Blockwise online-softmax attention (pure JAX flash algorithm).
+
+    GQA is handled in *grouped* form — KV heads are never materialized at
+    query-head multiplicity (the expand-then-compute formulation costs
+    H/Hkv× cache memory, which kills 32k decode/prefill shapes).  Scans KV
+    chunks; fp32 running (max, denom, accum).  ``q_offset`` shifts query
+    positions for chunked prefill against an existing cache.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    # [B,Hkv,G,Sq,dh]
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, dh).transpose(0, 2, 3, 1, 4)
+
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:  # pad keys to a chunk multiple; padded positions masked below
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Skp = Sk + pad
+    n_chunks = Skp // chunk
+    kf = k.reshape(B, n_chunks, chunk, Hkv, dh).transpose(1, 0, 3, 4, 2)  # [n,B,Hkv,dh,c]
+    vf = v.reshape(B, n_chunks, chunk, Hkv, dh).transpose(1, 0, 3, 2, 4)  # [n,B,Hkv,c,dh]
+
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def body(carry, kv):
+        m, l, acc, idx = carry
+        kc, vc = kv  # [B,Hkv,dh,c], [B,Hkv,c,dh]
+        s = jnp.einsum("bkgqd,bkdc->bkgqc", qf, kc.astype(jnp.float32))
+        k_pos = idx * chunk + jnp.arange(chunk)
+        if causal:
+            mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos < Sk)[None, :]
+        else:
+            mask = jnp.broadcast_to((k_pos < Sk)[None, :], (Sq, chunk))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, dh), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.asarray(0)), (kf, vf))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,Hkv,G,Sq,dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,  # [B, 1, H, dh]
+    k_cache: Array,  # [B, S, Hkv, dh]
+    v_cache: Array,  # [B, S, Hkv, dh]
+    cache_len: Array,  # [B] valid prefix lengths
+) -> Array:
+    """Single-token attention against a (possibly partially filled) cache.
+
+    Grouped GQA: the cache is read once at its native head count and dtype;
+    only the [B,Hkv,G,S] score tensor is fp32.
+    """
+    B, S, Hkv, dh = k_cache.shape
+    H = q.shape[2]
+    G = H // Hkv
+    qf = (q.astype(jnp.float32) * (1.0 / math.sqrt(dh))).reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] < cache_len[:, None]  # [B,S]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def cross_entropy_loss(logits: Array, labels: Array, *, z_loss: float = 0.0) -> Array:
+    """Mean token cross-entropy with optional z-loss, fp32 log-softmax."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse**2).mean()
+    return loss

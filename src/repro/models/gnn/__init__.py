@@ -1,0 +1,11 @@
+"""GNN family: gcn-cora, pna, nequip, equiformer-v2.
+
+Message passing is built on ``jax.ops.segment_sum``/``segment_max`` over
+edge-index arrays (JAX has no sparse message-passing primitive — this IS
+part of the system, per the assignment).  Three kernel regimes are covered:
+
+* SpMM-style aggregation       — gcn.py, pna.py
+* E(3) irrep tensor products   — nequip.py (+ e3.py substrate)
+* eSCN SO(2) convolutions      — equiformer_v2.py (Wigner rotation to the
+                                 edge frame, O(L³) instead of O(L⁶) TP)
+"""

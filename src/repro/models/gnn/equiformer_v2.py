@@ -1,0 +1,318 @@
+"""EquiformerV2 — equivariant graph attention via eSCN SO(2) convolutions
+(arXiv:2306.12059).  Assigned config: 12 layers, 128 channels, l_max=6,
+m_max=2, 8 heads.
+
+The eSCN mechanism (the O(L⁶)→O(L³) trick this arch exists for):
+
+1. per edge, rotate source/destination irrep features into the edge frame
+   with real Wigner-D matrices (``D_lᵀ f``, edge vector → ẑ) — after which
+   an SO(3)-equivariant tensor product reduces to an **SO(2) linear map
+   acting per-m**, and truncating to |m| ≤ m_max (=2) keeps only
+   1 + Σ_{m≤2} pairs of rows per l instead of all (2l+1);
+2. SO(2) linear: m=0 rows mix with a plain matrix; (+m, −m) row pairs mix
+   with the rotation-structured pair (W_r, W_i):
+        y₊ = W_r x₊ − W_i x₋ ,   y₋ = W_i x₊ + W_r x₋ ;
+3. the m=0 (invariant) output drives multi-head attention logits;
+   edge-softmax over incoming edges; values are rotated back (``D_l y``)
+   and segment-summed.
+
+Blocks: equivariant RMS-norm → eSCN attention → residual → gated FFN →
+residual.  Edge chunking (``edge_chunk``) bounds the per-edge Wigner/feature
+working set on the 61M-edge cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain, logical_spec as L
+from repro.models.common import dense_init
+from repro.models.gnn import e3
+from repro.models.gnn import graph as G
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    channels: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 10
+    n_classes: int = 7
+    avg_degree: float = 8.0
+    task: str = "graph_reg"
+    edge_chunk: Optional[int] = None
+    remat: bool = True  # rematerialize per-layer + per-edge-chunk
+    scan_layers: bool = True  # lax.scan over stacked layers (buffer reuse)
+    dtype: Any = jnp.float32
+
+
+def _n_l(cfg, m: int) -> int:
+    """number of l's carrying an |m| component."""
+    return cfg.l_max + 1 - m
+
+
+def init_params(cfg: EquiformerV2Config, key) -> Dict[str, Any]:
+    C, H = cfg.channels, cfg.n_heads
+    keys = jax.random.split(key, 16 * cfg.n_layers + 4)
+    ki = iter(keys)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = {
+            "norm_scale": jnp.ones((cfg.l_max + 1, C), cfg.dtype),
+            "rad1": dense_init(next(ki), cfg.n_rbf, 64, cfg.dtype),
+            "rad2": dense_init(next(ki), 64, C, cfg.dtype),
+            # SO(2) linear weights; inputs concat (src, dst) -> 2C channels
+            "w_m0": dense_init(next(ki), _n_l(cfg, 0) * 2 * C, _n_l(cfg, 0) * C, cfg.dtype),
+            "w_attn1": dense_init(next(ki), C, C, cfg.dtype),
+            "w_attn2": dense_init(next(ki), C, H, cfg.dtype),
+            "w_out": jax.random.normal(next(ki), (cfg.l_max + 1, C, C), cfg.dtype) / math.sqrt(C),
+            # FFN
+            "ffn_gate": dense_init(next(ki), C, (cfg.l_max + 1) * C, cfg.dtype),
+            "ffn_s1": dense_init(next(ki), C, 2 * C, cfg.dtype),
+            "ffn_s2": dense_init(next(ki), 2 * C, C, cfg.dtype),
+            "ffn_mix": jax.random.normal(next(ki), (cfg.l_max + 1, C, C), cfg.dtype) / math.sqrt(C),
+        }
+        for m in range(1, cfg.m_max + 1):
+            lp[f"w_m{m}r"] = dense_init(next(ki), _n_l(cfg, m) * 2 * C, _n_l(cfg, m) * C, cfg.dtype)
+            lp[f"w_m{m}i"] = dense_init(next(ki), _n_l(cfg, m) * 2 * C, _n_l(cfg, m) * C, cfg.dtype)
+        layers.append(lp)
+    return {
+        "embed": jax.random.normal(next(ki), (cfg.n_species, C), cfg.dtype) * 0.5,
+        "layers": layers,
+        "head1": dense_init(next(ki), C, C, cfg.dtype),
+        "head2": dense_init(next(ki), C, max(cfg.n_classes, 1), cfg.dtype),
+    }
+
+
+def logical_specs(cfg: EquiformerV2Config):
+    def layer():
+        lp = {
+            "norm_scale": L((None, None)),
+            "rad1": L((None, None)),
+            "rad2": L((None, None)),
+            "w_m0": L((None, "mlp")),
+            "w_attn1": L((None, None)),
+            "w_attn2": L((None, None)),
+            "w_out": L((None, None, None)),
+            "ffn_gate": L((None, None)),
+            "ffn_s1": L((None, "mlp")),
+            "ffn_s2": L(("mlp", None)),
+            "ffn_mix": L((None, None, None)),
+        }
+        for m in range(1, cfg.m_max + 1):
+            lp[f"w_m{m}r"] = L((None, "mlp"))
+            lp[f"w_m{m}i"] = L((None, "mlp"))
+        return lp
+
+    return {
+        "embed": L((None, None)),
+        "layers": [layer() for _ in range(cfg.n_layers)],
+        "head1": L((None, None)),
+        "head2": L((None, None)),
+    }
+
+
+def _l_of_slot(l_max: int) -> jnp.ndarray:
+    """Static map irrep-slot index -> l (length (l_max+1)²)."""
+    import numpy as np
+
+    out = np.concatenate([np.full(2 * l + 1, l) for l in range(l_max + 1)])
+    return jnp.asarray(out, jnp.int32)
+
+
+def _equiv_norm(h, scale, sl, eps=1e-6):
+    """RMS over (m) per l, per channel; learnable per-(l, channel) scale.
+
+    Expressed as one block-mean einsum + one gather — per-l ``.at[].set``
+    chains materialize a full feature copy per l, which at ogb_products
+    scale is what blows the per-device temp arena (§Dry-run log)."""
+    l_max = len(sl) - 1
+    import numpy as np
+
+    A = np.zeros(((l_max + 1) ** 2, l_max + 1), np.float32)
+    for l, (s, e) in enumerate(sl):
+        A[s:e, l] = 1.0 / (e - s)
+    means = jnp.einsum("nmc,ml->nlc", h * h, jnp.asarray(A))  # [N, L+1, C]
+    rms = jnp.sqrt(means + eps)
+    slot = _l_of_slot(l_max)
+    out = h / rms[:, slot, :] * scale[slot][None, :, :]
+    return constrain(out, "nodes", None, "channels")
+
+
+def _attention_edges(lp, h, src, dst, vec, mask, cfg: EquiformerV2Config):
+    """eSCN attention messages for one edge set → node aggregation."""
+    from repro.models.gnn.nequip import bessel_rbf
+
+    n = h.shape[0]
+    E = src.shape[0]
+    C, H = cfg.channels, cfg.n_heads
+    sl = e3.irrep_slices(cfg.l_max)
+
+    r = jnp.linalg.norm(vec, axis=-1)
+    mask = mask * (r > 1e-6)  # zero-length edges have no frame (equivariance)
+    rad = jax.nn.silu(bessel_rbf(r, cfg.n_rbf, cfg.cutoff) @ lp["rad1"]) @ lp["rad2"]  # [E, C]
+    alpha_ang, beta_ang = e3.edge_alignment_angles(vec)
+    D = [e3.real_wigner_D(l, alpha_ang, beta_ang) for l in range(cfg.l_max + 1)]
+
+    # rotate src/dst features into the edge frame, keep |m| <= m_max rows
+    x_src = constrain(h[src], "edges", None, "channels")
+    x_dst = constrain(h[dst], "edges", None, "channels")
+    rows = {m: {"p": [], "n": []} for m in range(cfg.m_max + 1)}
+    for l, (s, e) in enumerate(sl):
+        fs = jnp.einsum("enm,enc->emc", D[l], x_src[:, s:e, :])  # D^T f
+        fd = jnp.einsum("enm,enc->emc", D[l], x_dst[:, s:e, :])
+        both = jnp.concatenate([fs, fd], axis=-1)  # [E, 2l+1, 2C]
+        for m in range(0, min(l, cfg.m_max) + 1):
+            rows[m]["p"].append(both[:, l + m, :])
+            if m > 0:
+                rows[m]["n"].append(both[:, l - m, :])
+
+    # SO(2) linear per m
+    y = {}
+    x0 = jnp.stack(rows[0]["p"], axis=1).reshape(E, -1)  # [E, n_l0*2C]
+    y[0] = (x0 @ lp["w_m0"]).reshape(E, _n_l(cfg, 0), C)
+    for m in range(1, cfg.m_max + 1):
+        xp = jnp.stack(rows[m]["p"], axis=1).reshape(E, -1)
+        xn = jnp.stack(rows[m]["n"], axis=1).reshape(E, -1)
+        yr = (xp @ lp[f"w_m{m}r"] - xn @ lp[f"w_m{m}i"]).reshape(E, _n_l(cfg, m), C)
+        yn = (xp @ lp[f"w_m{m}i"] + xn @ lp[f"w_m{m}r"]).reshape(E, _n_l(cfg, m), C)
+        y[m] = (yr, yn)
+
+    # radial modulation + attention logits from the invariant (m=0, l=0) slot
+    inv = jax.nn.silu(y[0][:, 0, :] * rad)  # [E, C]
+    logits = jax.nn.silu(inv @ lp["w_attn1"]) @ lp["w_attn2"]  # [E, H]
+    logits = jnp.where(mask[:, None] > 0, logits, -jnp.inf)
+    att = G.scatter_softmax(logits, dst, n)  # [E, H]
+    att = jnp.where(mask[:, None] > 0, att, 0.0)
+
+    # rebuild edge-frame value tensor, rotate back, aggregate with attention
+    # (per-l blocks built as a list + one concat — no full-copy .at chains)
+    blocks = []
+    for l, (s, e) in enumerate(sl):
+        cols = []
+        for m in range(-l, l + 1):
+            am = abs(m)
+            if am > cfg.m_max:
+                cols.append(jnp.zeros((E, C), h.dtype))
+            elif m == 0:
+                cols.append(y[0][:, l, :] * rad)
+            elif m > 0:
+                cols.append(y[am][0][:, l - am, :] * rad)
+            else:
+                cols.append(y[am][1][:, l - am, :] * rad)
+        blk = jnp.stack(cols, axis=1)  # [E, 2l+1, C]
+        blocks.append(jnp.einsum("emn,enc->emc", D[l], blk))
+    val = jnp.concatenate(blocks, axis=1)  # [E, (l_max+1)², C]
+    val = constrain(val, "edges", None, "channels")
+    vh = val.reshape(E, -1, H, C // H) * att[:, None, :, None]
+    agg = jax.ops.segment_sum(vh.reshape(E, -1, C), dst, num_segments=n)
+    agg = constrain(agg, "nodes", None, "channels")
+    return agg / math.sqrt(cfg.avg_degree)
+
+
+def _attention(lp, h, batch: G.GraphBatch, cfg: EquiformerV2Config):
+    src, dst = batch.edge_src, batch.edge_dst
+    mask = batch.edge_mask.astype(jnp.float32)
+    vec = (batch.positions[src] - batch.positions[dst]).astype(jnp.float32)
+    if not cfg.edge_chunk or src.shape[0] <= cfg.edge_chunk:
+        return _attention_edges(lp, h, src, dst, vec, mask, cfg)
+    # chunked: softmax must stay global per dst -> two-pass (max, sum) is
+    # overkill here; we instead pad chunks and rely on segment softmax per
+    # chunk being combined by summed numerators/denominators.
+    E = src.shape[0]
+    chunk = cfg.edge_chunk
+    pad = (-E) % chunk
+    srcp = jnp.pad(src, (0, pad))
+    dstp = jnp.pad(dst, (0, pad))
+    vecp = jnp.pad(vec, ((0, pad), (0, 0)), constant_values=1.0)
+    maskp = jnp.pad(mask, (0, pad))
+    nc = (E + pad) // chunk
+
+    from repro.models.gnn.chunked import sum_over_chunks
+
+    def f(args, x):
+        lp_, h_ = args
+        s, d, v, m = x
+        return _attention_edges(lp_, h_, s, d, v, m, cfg) / nc
+
+    def keep_sharded(gargs):
+        glp, gh = gargs
+        return glp, constrain(gh, "nodes", None, "channels")
+
+    # NOTE: chunked attention normalizes softmax within chunks (an
+    # approximation used only for the huge full-graph cells; exact for
+    # single-chunk graphs).  Documented in DESIGN.md §Arch-applicability.
+    # shard the CHUNK dim — see nequip._messages_chunked for why
+    xs = (constrain(srcp.reshape(nc, chunk), None, "edges"),
+          constrain(dstp.reshape(nc, chunk), None, "edges"),
+          constrain(vecp.reshape(nc, chunk, 3), None, "edges", None),
+          constrain(maskp.reshape(nc, chunk), None, "edges"))
+    out = jax.ShapeDtypeStruct((h.shape[0], (cfg.l_max + 1) ** 2, cfg.channels), h.dtype)
+    return sum_over_chunks(f, (lp, h), xs, out, args_constrain=keep_sharded)
+
+
+def forward(params, batch: G.GraphBatch, cfg: EquiformerV2Config) -> Array:
+    assert batch.positions is not None and batch.species is not None
+    n = batch.positions.shape[0]
+    sl = e3.irrep_slices(cfg.l_max)
+    dim = (cfg.l_max + 1) ** 2
+    C = cfg.channels
+
+    h = jnp.zeros((n, dim, C), cfg.dtype)
+    h = h.at[:, 0, :].set(params["embed"][batch.species])
+    h = constrain(h, "nodes", None, "channels")
+
+    slot = _l_of_slot(cfg.l_max)
+
+    def mix(x, w):
+        # per-l channel mixing as one slot-gathered einsum (no .at chains);
+        # output constrained so GSPMD reduce-scatters instead of keeping the
+        # all-gathered full-channel intermediate alive
+        return constrain(jnp.einsum("nmc,mcd->nmd", x, w[slot]),
+                         "nodes", None, "channels")
+
+    def layer(h, lp):
+        hn = _equiv_norm(h, lp["norm_scale"], sl)
+        attn = _attention(lp, hn, batch, cfg)
+        h = h + mix(attn, lp["w_out"])
+        h = constrain(h, "nodes", None, "channels")
+        # gated FFN
+        hn = _equiv_norm(h, lp["norm_scale"], sl)
+        scal = jax.nn.silu(hn[:, 0, :] @ lp["ffn_s1"]) @ lp["ffn_s2"]  # [N, C]
+        gates = jax.nn.sigmoid(hn[:, 0, :] @ lp["ffn_gate"]).reshape(n, cfg.l_max + 1, C)
+        up = mix(hn, lp["ffn_mix"]) * gates[:, slot, :]
+        up = jnp.concatenate([scal[:, None, :].astype(up.dtype), up[:, 1:, :]], axis=1)
+        return (h + up).astype(cfg.dtype)  # fp32 internals -> storage dtype
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers and len(params["layers"]) > 1:
+        # stack the per-layer trees and scan: one body in the HLO, buffers
+        # reused across layers, saved carry = the (sharded) h only
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+        h, _ = jax.lax.scan(lambda h, lp: (layer(h, lp), None), h, stacked)
+    else:
+        for lp in params["layers"]:
+            h = layer(h, lp)
+    return h
+
+
+def loss(params, batch: G.GraphBatch, cfg: EquiformerV2Config) -> Array:
+    h = forward(params, batch, cfg)
+    out = jax.nn.silu(h[:, 0, :] @ params["head1"]) @ params["head2"]
+    if cfg.task == "graph_reg":
+        energy = G.graph_readout(out[:, :1], batch.graph_id, batch.n_graphs, how="sum")
+        err = (energy[:, 0] - batch.labels.astype(jnp.float32)) * batch.label_mask
+        return (err**2).sum() / jnp.maximum(batch.label_mask.sum(), 1.0)
+    return G.masked_node_ce(out, batch.labels, batch.label_mask)

@@ -1,0 +1,75 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — gcn-cora assigned config.
+
+H' = σ( D̃^{-1/2}(A+I)D̃^{-1/2} H W )  with symmetric normalization computed
+from the edge index on the fly (the same normalize-by-degree op as the
+paper's Laplacian stage — the substrates are shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain, logical_spec as L
+from repro.models.common import dense_init
+from repro.models.gnn import graph as G
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+    task: str = "node_class"  # "node_class" | "graph_reg"
+
+
+def init_params(cfg: GCNConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    return {
+        "w": [dense_init(ks[i], dims[i], dims[i + 1], cfg.dtype) for i in range(cfg.n_layers)],
+        "b": [jnp.zeros((dims[i + 1],), cfg.dtype) for i in range(cfg.n_layers)],
+        "readout": dense_init(ks[-1], cfg.n_classes, 1, cfg.dtype),
+    }
+
+
+def logical_specs(cfg: GCNConfig):
+    return {
+        "w": [L((None, None)) for _ in range(cfg.n_layers)],
+        "b": [L((None,)) for _ in range(cfg.n_layers)],
+        "readout": L((None, None)),
+    }
+
+
+def forward(params, batch: G.GraphBatch, cfg: GCNConfig) -> Array:
+    n = batch.n_nodes
+    src, dst, mask = batch.edge_src, batch.edge_dst, batch.edge_mask.astype(jnp.float32)
+    # sym normalization with self loops folded in analytically
+    deg = G.degree(dst, n, mask) + 1.0
+    inv_sqrt = jax.lax.rsqrt(deg)
+    ew = mask * inv_sqrt[src] * inv_sqrt[dst]  # [E]
+    self_w = inv_sqrt * inv_sqrt  # A+I diagonal term
+
+    h = batch.node_feat.astype(cfg.dtype)
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        hw = h @ w + b
+        agg = G.scatter_sum(hw[src] * ew[:, None], dst, n) + hw * self_w[:, None]
+        agg = constrain(agg, "nodes", None)
+        h = jax.nn.relu(agg) if i < cfg.n_layers - 1 else agg
+    return h
+
+
+def loss(params, batch: G.GraphBatch, cfg: GCNConfig) -> Array:
+    out = forward(params, batch, cfg)
+    if cfg.task == "graph_reg":
+        pred = G.graph_readout(out, batch.graph_id, batch.n_graphs) @ params["readout"]
+        err = (pred[:, 0] - batch.labels.astype(jnp.float32)) * batch.label_mask
+        return (err**2).sum() / jnp.maximum(batch.label_mask.sum(), 1.0)
+    return G.masked_node_ce(out, batch.labels, batch.label_mask)

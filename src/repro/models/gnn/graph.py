@@ -1,0 +1,101 @@
+"""Graph batch container + segment-op message-passing helpers.
+
+Static-shape graph batches for jit: edges are index pairs (src, dst) with a
+validity mask (padding edges point at node 0 with mask 0).  Batched small
+graphs (the ``molecule`` shape) carry a per-node graph id for readout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Inputs are plain arrays so ShapeDtypeStructs slot straight in."""
+
+    node_feat: Array  # [N, F] float  (or species codes via input builders)
+    edge_src: Array  # [E] int32
+    edge_dst: Array  # [E] int32
+    edge_mask: Array  # [E] bool/float
+    labels: Array  # [N] int32 node labels or [G] float graph targets
+    label_mask: Array  # [N] or [G]
+    positions: Optional[Array] = None  # [N, 3] (geometric models)
+    species: Optional[Array] = None  # [N] int32 (geometric models)
+    graph_id: Optional[Array] = None  # [N] int32 (batched small graphs)
+    n_graphs: int = 1  # static
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.edge_src.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["node_feat", "edge_src", "edge_dst", "edge_mask", "labels",
+                 "label_mask", "positions", "species", "graph_id"],
+    meta_fields=["n_graphs"],
+)
+
+
+def scatter_sum(msg: Array, dst: Array, n: int) -> Array:
+    return jax.ops.segment_sum(msg, dst, num_segments=n)
+
+
+def scatter_mean(msg: Array, dst: Array, n: int, eps: float = 1e-9) -> Array:
+    s = jax.ops.segment_sum(msg, dst, num_segments=n)
+    c = jax.ops.segment_sum(jnp.ones((msg.shape[0], 1), msg.dtype), dst, num_segments=n)
+    return s / jnp.maximum(c, eps)
+
+
+def scatter_max(msg: Array, dst: Array, n: int) -> Array:
+    return jax.ops.segment_max(msg, dst, num_segments=n)
+
+
+def scatter_min(msg: Array, dst: Array, n: int) -> Array:
+    return -jax.ops.segment_max(-msg, dst, num_segments=n)
+
+
+def scatter_softmax(logits: Array, dst: Array, n: int) -> Array:
+    """Edge-softmax over incoming edges per destination node (GAT-style).
+    Fully-masked destinations (all logits -inf) yield zeros, not NaNs."""
+    mx = jax.ops.segment_max(logits, dst, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[dst])
+    ex = jnp.where(jnp.isfinite(logits), ex, 0.0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=n)
+    return ex / jnp.maximum(den[dst], 1e-30)
+
+
+def degree(dst: Array, n: int, mask: Optional[Array] = None) -> Array:
+    ones = jnp.ones_like(dst, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, dst, num_segments=n)
+
+
+def graph_readout(node_vals: Array, graph_id: Optional[Array], n_graphs: int, how="mean"):
+    if graph_id is None:
+        return node_vals.mean(axis=0, keepdims=True) if how == "mean" else node_vals.sum(0, keepdims=True)
+    s = jax.ops.segment_sum(node_vals, graph_id, num_segments=n_graphs)
+    if how == "sum":
+        return s
+    c = jax.ops.segment_sum(jnp.ones((node_vals.shape[0], 1), node_vals.dtype), graph_id, n_graphs)
+    return s / jnp.maximum(c, 1.0)
+
+
+def masked_node_ce(logits: Array, labels: Array, mask: Array) -> Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    per = (lse - ll) * mask.astype(jnp.float32)
+    return per.sum() / jnp.maximum(mask.astype(jnp.float32).sum(), 1.0)

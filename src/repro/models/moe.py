@@ -1,0 +1,226 @@
+"""Mixture-of-Experts FFN with capacity-based top-k token-choice routing.
+
+The GShard/Switch dispatch family, expressed scatter-style so it scales:
+instead of the O(T·E·C) dispatch one-hot einsum, tokens are scattered into a
+``[E, C, d]`` expert buffer by (expert_id, position-in-expert) — position
+computed with a masked cumulative sum.  Experts are sharded over the
+``model`` axis (EP); the scatter/gather across token- and expert-sharded
+layouts is GSPMD's all-to-all, which the roofline attributes to the
+collective term.
+
+Dropped tokens (capacity overflow) contribute zero and keep their residual
+path — standard practice.  Router runs in fp32; aux losses follow Switch
+(load-balance) + z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    load_balance_coef: float = 0.01
+    router_z_coef: float = 1e-3
+
+
+def _mask_padded_experts(logits: Array, n_logical: int) -> Array:
+    if logits.shape[-1] == n_logical:
+        return logits
+    valid = jnp.arange(logits.shape[-1]) < n_logical
+    return jnp.where(valid, logits, -1e30)
+
+
+def n_experts_padded(cfg: MoEConfig) -> int:
+    """Expert count padded to the max TP degree (16) so the expert axis
+    shards; the router only ever routes to the logical n_experts — padded
+    experts see zero traffic (cf. vocab padding in the transformer)."""
+    return ((cfg.n_experts + 15) // 16) * 16
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, n_layers: int, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 4)
+    E, ffe = n_experts_padded(cfg), cfg.d_ff_expert
+    shape_in = (n_layers, E, d_model, ffe)
+    shape_out = (n_layers, E, ffe, d_model)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(ffe)
+    return {
+        "router": jax.random.normal(ks[0], (n_layers, d_model, E), jnp.float32) * 0.02,
+        "w_gate": (jax.random.normal(ks[1], shape_in, dtype) * s_in),
+        "w_up": (jax.random.normal(ks[2], shape_in, dtype) * s_in),
+        "w_down": (jax.random.normal(ks[3], shape_out, dtype) * s_out),
+    }
+
+
+def moe_logical_specs() -> Dict[str, Any]:
+    from repro.launch.sharding import logical_spec as L
+
+    return {
+        "router": L((None, None, None)),
+        # experts over the model axis (EP); ffn dim stays local per expert
+        "w_gate": L((None, "experts", None, None)),
+        "w_up": L((None, "experts", None, None)),
+        "w_down": L((None, "experts", None, None)),
+    }
+
+
+def moe_ffn(p: Dict[str, Array], x: Array, cfg: MoEConfig) -> Tuple[Array, Dict[str, Array]]:
+    """x: [T, d] tokens (caller flattens batch×seq).  Returns (y, aux).
+
+    Dispatches to the shard_map EP implementation when a mesh with a
+    ``model`` axis is active (production path), else the single-device /
+    GSPMD scatter formulation (smoke tests, baselines).
+    """
+    from repro.launch.sharding import current_mesh
+
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.axis_names
+            and n_experts_padded(cfg) % mesh.shape["model"] == 0):
+        return moe_ffn_shard_map(p, x, cfg, mesh)
+    return moe_ffn_gspmd(p, x, cfg)
+
+
+def moe_ffn_gspmd(
+    p: Dict[str, Array], x: Array, cfg: MoEConfig
+) -> Tuple[Array, Dict[str, Array]]:
+    """x: [T, d] tokens (caller flattens batch×seq).  Returns (y, aux)."""
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    E_pad = p["w_gate"].shape[0]
+    # capacity per expert, padded to the data-shard multiple so the capacity
+    # axis shards over (pod, data) — without this the expert GEMMs replicate
+    # across the data axis (16× waste; caught by the dry-run cost pass)
+    C = max(int(T * K * cfg.capacity_factor / E), 1)
+    C = ((C + 31) // 32) * 32
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # [T, E_pad]
+    logits = _mask_padded_experts(logits, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, K)  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    sid = ids.reshape(-1)  # [T*K] expert per slot
+    sgate = gate.reshape(-1)
+    onehot = jax.nn.one_hot(sid, E_pad, dtype=jnp.int32)  # [T*K, E_pad]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot) * onehot  # rank within expert
+    pos = pos.sum(-1)  # [T*K]
+    keep = (pos < C).astype(x.dtype)
+    pos_c = jnp.minimum(pos, C - 1)
+
+    x_exp = jnp.repeat(x, K, axis=0) * keep[:, None]  # [T*K, d]
+    x_exp = constrain(x_exp, "batch", None)
+    buf = jnp.zeros((E_pad, C, d), x.dtype).at[sid, pos_c].add(x_exp)
+    buf = constrain(buf, "experts", "batch", None)  # EP × capacity-DP
+
+    # expert SwiGLU, batched over E (einsum -> MXU per expert)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y_buf = constrain(y_buf, "experts", "batch", None)
+
+    y_slots = y_buf[sid, pos_c] * (keep * sgate.astype(x.dtype))[:, None]
+    y_slots = constrain(y_slots, "batch", None)
+    y = y_slots.reshape(T, K, d).sum(axis=1)
+
+    # aux losses (Switch load-balance + router z-loss)
+    frac_tokens = jnp.mean(jax.nn.one_hot(ids[:, 0], E_pad, dtype=jnp.float32), axis=0)
+    mean_probs = probs.mean(axis=0)
+    aux = {
+        "load_balance": E * jnp.sum(frac_tokens * mean_probs) * cfg.load_balance_coef,
+        "router_z": cfg.router_z_coef * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - keep.astype(jnp.float32).mean(),
+    }
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# production path: replicated-dispatch expert parallelism (shard_map)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_shard_map(p, x: Array, cfg: MoEConfig, mesh) -> Tuple[Array, Dict[str, Array]]:
+    """Expert parallelism exploiting the TP layout directly.
+
+    Activations are replicated along ``model`` (standard Megatron TP), so
+    every device in a mesh row already *has* all of its row's tokens.  Each
+    device therefore routes locally, gathers the slots destined for its own
+    E/TP experts into a small local capacity buffer, runs its expert GEMMs,
+    and one ``psum`` over ``model`` recombines the outputs — the same single
+    all-reduce a dense TP FFN pays.  No all-to-all, no cross-shard scatter
+    (GSPMD's generic handling of that scatter replicates the expert GEMMs
+    across the data axis or reshards the buffer at ~16× cost — measured in
+    EXPERIMENTS.md §Dry-run).
+
+    Capacity is per-device: C_loc = T_loc·K·cf/E (overflow drops per row,
+    the standard local-capacity semantics).
+    """
+    E, K = cfg.n_experts, cfg.top_k
+    E_pad = p["w_gate"].shape[0]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = mesh.shape["model"]
+    e_loc = E_pad // tp
+
+    from jax.sharding import PartitionSpec as P
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P("model"), P("model"), P("model"), P(data_axes)),
+        out_specs=(P(data_axes), P()),
+        check_vma=False,
+    )
+    def f(router, wg, wu, wd, x_loc):
+        T_loc, d = x_loc.shape
+        C = max(int(T_loc * K * cfg.capacity_factor / E), 1)
+        logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+        logits = _mask_padded_experts(logits, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, ids = jax.lax.top_k(probs, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        sid = ids.reshape(-1)
+        sgate = gate.reshape(-1).astype(x_loc.dtype)
+        first = jax.lax.axis_index("model") * e_loc
+        lid = sid - first
+        mine = jnp.logical_and(lid >= 0, lid < e_loc)
+        lid_c = jnp.clip(lid, 0, e_loc - 1)
+        onehot = jax.nn.one_hot(lid_c, e_loc, dtype=jnp.int32) * mine[:, None].astype(jnp.int32)
+        pos = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(-1)
+        keep = jnp.logical_and(mine, pos < C).astype(x_loc.dtype)
+        pos_c = jnp.minimum(pos, C - 1)
+
+        x_exp = jnp.repeat(x_loc, K, axis=0) * keep[:, None]
+        buf = jnp.zeros((e_loc, C, d), x_loc.dtype).at[lid_c, pos_c].add(x_exp)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+            "ecd,edf->ecf", buf, wu
+        )
+        y_buf = jnp.einsum("ecf,efd->ecd", h, wd)
+        y_slots = y_buf[lid_c, pos_c] * (keep * sgate)[:, None]
+        y = y_slots.reshape(T_loc, K, d).sum(axis=1)
+        y = jax.lax.psum(y, "model")
+
+        frac = jnp.mean(jax.nn.one_hot(ids[:, 0], E_pad, dtype=jnp.float32), axis=0)
+        lb = E * jnp.sum(frac * probs.mean(0)) * cfg.load_balance_coef
+        rz = cfg.router_z_coef * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        aux_vec = jnp.stack([lb, rz])
+        aux_vec = jax.lax.pmean(aux_vec, data_axes) if data_axes else aux_vec
+        return y, aux_vec
+
+    y, aux_vec = f(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+    aux = {"load_balance": aux_vec[0], "router_z": aux_vec[1],
+           "dropped_frac": jnp.zeros(())}
+    return y, aux

@@ -1,0 +1,190 @@
+"""AutoInt (arXiv:1810.11921) + the sparse-embedding substrate.
+
+JAX has no ``nn.EmbeddingBag`` — :func:`embedding_bag` implements it with
+``jnp.take`` + ``jax.ops.segment_sum`` (per the assignment, this IS part of
+the system).  Tables are row-sharded over the ``model`` axis (classic DLRM
+model-parallelism); lookups against row-sharded tables become GSPMD
+gather + all-to-all, attributed to the collective roofline term.
+
+Model: 39 categorical fields → 16-dim embeddings → 3 self-attention layers
+(2 heads, d_attn=32) over the field axis → flatten → logit.  Serving paths:
+``serve_logits`` (ranking) and ``retrieval_scores`` (1 query vs N candidate
+dot products — the cell the paper's k-means IVF accelerates, see
+examples/ann_retrieval.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain, logical_spec as L
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_fields: int = 39
+    rows_per_table: int = 1_000_000  # hashed vocabulary per field
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    n_multihot: int = 4  # last fields are multi-hot bags (exercise EmbeddingBag)
+    hot_per_field: int = 8  # bag size for multi-hot fields
+    dtype: Any = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def embedding_bag(
+    table: Array,  # [rows, d]
+    ids: Array,  # [n_bags, bag] int32
+    weights: Array | None = None,  # [n_bags, bag]
+    *,
+    combine: str = "mean",
+) -> Array:
+    """torch-style EmbeddingBag: gather rows, reduce per bag.
+
+    Implemented as take + reshape-reduce (bags are rectangular here; the
+    ragged case routes through segment_sum — see :func:`embedding_bag_ragged`).
+    """
+    emb = jnp.take(table, ids, axis=0)  # [n_bags, bag, d]
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if combine == "sum":
+        return emb.sum(axis=1)
+    if combine == "mean":
+        den = ids.shape[1] if weights is None else jnp.maximum(weights.sum(1, keepdims=True), 1e-9)
+        return emb.sum(axis=1) / den
+    if combine == "max":
+        return emb.max(axis=1)
+    raise ValueError(combine)
+
+
+def embedding_bag_ragged(
+    table: Array, flat_ids: Array, bag_ids: Array, n_bags: int, *, combine: str = "sum"
+) -> Array:
+    """Ragged EmbeddingBag: gather + segment reduction by bag id."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    s = jax.ops.segment_sum(emb, bag_ids, num_segments=n_bags)
+    if combine == "sum":
+        return s
+    c = jax.ops.segment_sum(jnp.ones((flat_ids.shape[0], 1), emb.dtype), bag_ids, n_bags)
+    return s / jnp.maximum(c, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AutoInt
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: AutoIntConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 4 + 4 * cfg.n_attn_layers)
+    ki = iter(keys)
+    d, da, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    tables = (
+        jax.random.normal(next(ki), (cfg.n_fields, cfg.rows_per_table, d), cfg.dtype) * 0.01
+    )
+    layers = []
+    d_in = d
+    for _ in range(cfg.n_attn_layers):
+        layers.append(
+            {
+                "wq": dense_init(next(ki), d_in, H * da, cfg.dtype),
+                "wk": dense_init(next(ki), d_in, H * da, cfg.dtype),
+                "wv": dense_init(next(ki), d_in, H * da, cfg.dtype),
+                "w_res": dense_init(next(ki), d_in, H * da, cfg.dtype),
+            }
+        )
+        d_in = H * da
+    return {
+        "tables": tables,
+        "layers": layers,
+        "w_out": dense_init(next(ki), cfg.n_fields * d_in, 1, cfg.dtype),
+        "b_out": jnp.zeros((1,), cfg.dtype),
+        # query tower for retrieval cells: project pooled fields to embed space
+        "w_query": dense_init(next(ki), cfg.n_fields * d_in, 64, cfg.dtype),
+    }
+
+
+def logical_specs(cfg: AutoIntConfig):
+    layer = {"wq": L((None, None)), "wk": L((None, None)), "wv": L((None, None)), "w_res": L((None, None))}
+    return {
+        "tables": L((None, "table_rows", None)),
+        "layers": [dict(layer) for _ in range(cfg.n_attn_layers)],
+        "w_out": L((None, None)),
+        "b_out": L((None,)),
+        "w_query": L((None, None)),
+    }
+
+
+def _field_embeddings(params, batch: Dict[str, Array], cfg: AutoIntConfig) -> Array:
+    """[B, n_fields, d] from single-hot ids [B, n_single] + multi-hot bags."""
+    ids = batch["ids"]  # [B, n_single]
+    B = ids.shape[0]
+    n_single = cfg.n_fields - cfg.n_multihot
+    # single-hot: one vmapped take per field over the stacked table tensor
+    idx = jnp.arange(n_single)
+    single = jax.vmap(lambda f, i: params["tables"][f][i], in_axes=(0, 1), out_axes=1)(
+        idx, ids
+    )  # [B, n_single, d]
+    outs = [single]
+    if cfg.n_multihot:
+        bags = batch["bag_ids"]  # [B, n_multihot, hot]
+        for j in range(cfg.n_multihot):
+            t = params["tables"][n_single + j]
+            outs.append(embedding_bag(t, bags[:, j], combine="mean")[:, None, :])
+    x = jnp.concatenate(outs, axis=1)  # [B, n_fields, d]
+    return constrain(x, "batch", None, None)
+
+
+def interact(params, x: Array, cfg: AutoIntConfig) -> Array:
+    """Multi-head self-attention over the field axis (AutoInt §3.3)."""
+    B, F, _ = x.shape
+    H, da = cfg.n_heads, cfg.d_attn
+    for lp in params["layers"]:
+        q = (x @ lp["wq"]).reshape(B, F, H, da)
+        k = (x @ lp["wk"]).reshape(B, F, H, da)
+        v = (x @ lp["wv"]).reshape(B, F, H, da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / math.sqrt(da)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ lp["w_res"])
+        x = constrain(x, "batch", None, None)
+    return x
+
+
+def forward_logits(params, batch: Dict[str, Array], cfg: AutoIntConfig) -> Array:
+    x = _field_embeddings(params, batch, cfg)
+    x = interact(params, x, cfg)
+    flat = x.reshape(x.shape[0], -1)
+    return (flat @ params["w_out"] + params["b_out"])[:, 0]
+
+
+def train_loss(params, batch: Dict[str, Array], cfg: AutoIntConfig) -> Array:
+    logits = forward_logits(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    lf = logits.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(jnp.maximum(lf, 0) - lf * y + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+
+
+def query_embedding(params, batch: Dict[str, Array], cfg: AutoIntConfig) -> Array:
+    x = _field_embeddings(params, batch, cfg)
+    x = interact(params, x, cfg)
+    q = x.reshape(x.shape[0], -1) @ params["w_query"]
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+
+
+def retrieval_scores(query: Array, candidates: Array) -> Array:
+    """[Q, d] × [N, d] → [Q, N] dot-product scores (batched MXU, no loops)."""
+    scores = query.astype(jnp.float32) @ candidates.astype(jnp.float32).T
+    return constrain(scores, None, "candidates")

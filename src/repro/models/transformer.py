@@ -1,0 +1,322 @@
+"""Decoder-only LM transformer: RoPE, GQA, optional qk-norm / QKV bias / MoE.
+
+Covers the five assigned LM architectures (glm4-9b, qwen2-7b, qwen3-0.6b,
+granite-moe-3b-a800m, olmoe-1b-7b) from one config.  Layers are stacked on a
+leading ``L`` axis and applied with ``jax.lax.scan`` (+ ``jax.checkpoint``)
+— constant-size HLO regardless of depth, which keeps 512-device dry-run
+compiles tractable and is the standard production remat layout.
+
+Three lowered entry points (one per assigned shape class):
+  ``train_loss``   — next-token CE over [B, S] token batches,
+  ``prefill``      — run a prompt, return last-position logits + KV cache,
+  ``decode_step``  — one token against a KV cache (``decode_*`` cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain, logical_spec as L
+from repro.models import common as cm
+from repro.models.moe import MoEConfig, init_moe_params, moe_ffn, moe_logical_specs
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+    remat: bool = True
+    remat_policy: str = "nothing"  # "nothing" | "dots" — §Perf knob
+    scan_unroll: bool = False  # True: unroll the layer scan (dry-run cost
+    # pass — XLA cost analysis counts loop bodies once; unrolled HLO is exact)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/logits rows padded to the TP-shardable multiple (the
+        logical vocab stays exact; padded logits are masked to -inf)."""
+        return ((self.vocab + 31) // 32) * 32
+
+    def param_count(self) -> int:
+        c = self.vocab * self.d_model * 2  # embed + head
+        per = self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+        if self.moe:
+            per += self.d_model * self.moe.n_experts + 3 * self.moe.n_experts * self.d_model * self.moe.d_ff_expert
+        else:
+            per += 3 * self.d_model * self.d_ff
+        return c + self.n_layers * per
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        per_active = (
+            self.d_model * (self.q_dim + 2 * self.kv_dim)
+            + self.q_dim * self.d_model
+            + self.d_model * self.moe.n_experts
+            + 3 * self.moe.top_k * self.d_model * self.moe.d_ff_expert
+        )
+        return self.vocab * self.d_model * 2 + self.n_layers * per_active
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key: Array) -> Params:
+    ks = jax.random.split(key, 12)
+    Ln, d, dt = cfg.n_layers, cfg.d_model, cfg.dtype
+    s = 0.02
+
+    def nrm(k, *shape, scale=s):
+        return jax.random.normal(k, shape, dt) * scale
+
+    attn = {
+        "wq": nrm(ks[0], Ln, d, cfg.q_dim, scale=d**-0.5),
+        "wk": nrm(ks[1], Ln, d, cfg.kv_dim, scale=d**-0.5),
+        "wv": nrm(ks[2], Ln, d, cfg.kv_dim, scale=d**-0.5),
+        "wo": nrm(ks[3], Ln, cfg.q_dim, d, scale=cfg.q_dim**-0.5),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((Ln, cfg.q_dim), dt)
+        attn["bk"] = jnp.zeros((Ln, cfg.kv_dim), dt)
+        attn["bv"] = jnp.zeros((Ln, cfg.kv_dim), dt)
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.ones((Ln, cfg.d_head), dt)
+        attn["k_norm"] = jnp.ones((Ln, cfg.d_head), dt)
+
+    if cfg.moe is not None:
+        mlp = init_moe_params(ks[4], d, cfg.moe, Ln, dt)
+    else:
+        mlp = {
+            "w_gate": nrm(ks[5], Ln, d, cfg.d_ff, scale=d**-0.5),
+            "w_up": nrm(ks[6], Ln, d, cfg.d_ff, scale=d**-0.5),
+            "w_down": nrm(ks[7], Ln, cfg.d_ff, d, scale=cfg.d_ff**-0.5),
+        }
+
+    return {
+        "embed": cm.embed_init(ks[8], cfg.vocab_padded, d, dt),
+        "layers": {
+            "attn": attn,
+            "mlp": mlp,
+            "ln1": jnp.ones((Ln, d), dt),
+            "ln2": jnp.ones((Ln, d), dt),
+        },
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": cm.dense_init(ks[9], d, cfg.vocab_padded, dt),
+    }
+
+
+def _mask_padded_logits(logits: Array, cfg: TransformerConfig) -> Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def logical_specs(cfg: TransformerConfig) -> Params:
+    """Logical-axis tags matching ``init_params`` output, resolved by the
+    launcher against the mesh (Megatron TP layout; KV replicated under GQA)."""
+    attn = {
+        "wq": L((None, None, "heads")),
+        "wk": L((None, None, "kv_heads")),
+        "wv": L((None, None, "kv_heads")),
+        "wo": L((None, "heads", None)),
+    }
+    if cfg.qkv_bias:
+        attn |= {"bq": L((None, "heads")), "bk": L((None, "kv_heads")), "bv": L((None, "kv_heads"))}
+    if cfg.qk_norm:
+        attn |= {"q_norm": L((None, None)), "k_norm": L((None, None))}
+    if cfg.moe is not None:
+        mlp = moe_logical_specs()
+    else:
+        mlp = {
+            "w_gate": L((None, None, "mlp")),
+            "w_up": L((None, None, "mlp")),
+            "w_down": L((None, "mlp", None)),
+        }
+    return {
+        "embed": L(("vocab", None)),
+        "layers": {"attn": attn, "mlp": mlp, "ln1": L((None, None)), "ln2": L((None, None))},
+        "final_norm": L((None,)),
+        "lm_head": L((None, "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer
+# ---------------------------------------------------------------------------
+
+def _project_qkv(lp, x, cfg: TransformerConfig, positions):
+    B, S, _ = x.shape
+    a = lp["attn"]
+    q = x @ a["wq"]
+    k = x @ a["wk"]
+    v = x @ a["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + a["bq"], k + a["bk"], v + a["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = cm.rmsnorm(q, a["q_norm"])
+        k = cm.rmsnorm(k, a["k_norm"])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _mlp(lp, x, cfg: TransformerConfig):
+    B, S, d = x.shape
+    if cfg.moe is not None:
+        y, aux = moe_ffn(lp["mlp"], x.reshape(B * S, d), cfg.moe)
+        return y.reshape(B, S, d), aux["load_balance"] + aux["router_z"]
+    m = lp["mlp"]
+    h = jax.nn.silu(x @ m["w_gate"]) * (x @ m["w_up"])
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ m["w_down"], jnp.zeros((), jnp.float32)
+
+
+def layer_forward(lp, x, cfg: TransformerConfig, positions, q_offset=0):
+    """Full-sequence layer (train / prefill). Returns (x, (aux, k, v))."""
+    h = cm.rmsnorm(x, lp["ln1"])
+    q, k, v = _project_qkv(lp, h, cfg, positions)
+    o = cm.flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, q_offset=q_offset)
+    o = o.reshape(*x.shape[:2], cfg.q_dim) @ lp["attn"]["wo"]
+    x = x + constrain(o, "batch", "seq", None)
+    h = cm.rmsnorm(x, lp["ln2"])
+    m, aux = _mlp(lp, h, cfg)
+    x = x + m
+    x = constrain(x, "batch", "seq", None)
+    return x, aux, k, v
+
+
+def layer_decode(lp, x, k_cache, v_cache, cache_len, cfg: TransformerConfig):
+    """Single-token layer against a cache. x: [B, 1, d]."""
+    B = x.shape[0]
+    h = cm.rmsnorm(x, lp["ln1"])
+    q, k, v = _project_qkv(lp, h, cfg, cache_len[:, None])
+    # write the new kv at position cache_len (per batch row)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, cache_len].set(k[:, 0])
+    v_cache = v_cache.at[bidx, cache_len].set(v[:, 0])
+    o = cm.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    o = o.reshape(B, 1, cfg.q_dim) @ lp["attn"]["wo"]
+    x = x + o
+    h = cm.rmsnorm(x, lp["ln2"])
+    m, _ = _mlp(lp, h, cfg)
+    return x + m, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# model entry points (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def _scan_layers(params, x, cfg: TransformerConfig, positions, collect_kv: bool):
+    def body(carry, lp):
+        x, aux_sum = carry
+        x, aux, k, v = layer_forward(lp, x, cfg, positions)
+        ys = (k, v) if collect_kv else None
+        return (x, aux_sum + aux), ys
+
+    body_fn = body
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body_fn = jax.checkpoint(body, policy=policy)
+    (x, aux), kv = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    return x, aux, kv
+
+
+def forward(params: Params, tokens: Array, cfg: TransformerConfig) -> Tuple[Array, Array]:
+    """tokens [B, S] -> logits [B, S, vocab], aux loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux, _ = _scan_layers(params, x, cfg, positions, collect_kv=False)
+    x = cm.rmsnorm(x, params["final_norm"])
+    logits = _mask_padded_logits(x @ params["lm_head"], cfg)
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def train_loss(params: Params, batch: Dict[str, Array], cfg: TransformerConfig) -> Array:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    return cm.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:]) + aux
+
+
+def prefill(params: Params, tokens: Array, cfg: TransformerConfig):
+    """Prompt pass. Returns (last-position logits, kv cache stacked [L, ...])."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _, kv = _scan_layers(params, x, cfg, positions, collect_kv=True)
+    x = cm.rmsnorm(x[:, -1:], params["final_norm"])
+    logits = _mask_padded_logits(x @ params["lm_head"], cfg)
+    k_cache, v_cache = kv  # [L, B, S, Hkv, dh]
+    return logits, {"k": k_cache, "v": v_cache}
+
+
+def decode_step(params: Params, cache: Dict[str, Array], cache_len: Array, token: Array,
+                cfg: TransformerConfig):
+    """One decode step. token [B], cache_len [B]. Returns (logits, new cache)."""
+    B = token.shape[0]
+    x = params["embed"][token[:, None]].astype(cfg.dtype)
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        x, kc, vc = layer_decode(lp, x, kc, vc, cache_len, cfg)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = cm.rmsnorm(x, params["final_norm"])
+    logits = _mask_padded_logits(x @ params["lm_head"], cfg)
+    return logits, {"k": k_new, "v": v_new}
+
+
+def make_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_logical_specs():
+    return {"k": L((None, "batch", "kv_seq", "kv_heads", None)),
+            "v": L((None, "batch", "kv_seq", "kv_heads", None))}

@@ -1,0 +1,4 @@
+"""Optimizers + distributed-optimization tricks (self-contained, no optax)."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compress import compress_int8, decompress_int8, compressed_psum_mean  # noqa: F401

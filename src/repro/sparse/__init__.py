@@ -1,0 +1,22 @@
+"""Sparse-matrix substrate.
+
+JAX has no CSR/CSC/ELL support (BCOO only), so this package implements the
+sparse formats and kernels the paper depends on from first principles:
+
+* :mod:`repro.sparse.formats` — COO / CSR / BlockELL containers (pytrees) and
+  host-side builders/converters.
+* :mod:`repro.sparse.ops`     — SpMV / SpMM via ``jax.ops.segment_sum``,
+  degree vectors, Laplacian normalizations.
+* :mod:`repro.sparse.distributed` — shard_map row-block-partitioned SpMV used
+  by the pod-scale eigensolver and the GNNs.
+"""
+
+from repro.sparse.formats import COO, CSR, BlockELL, coo_from_edges, coo_to_csr, csr_to_blockell  # noqa: F401
+from repro.sparse.ops import (  # noqa: F401
+    spmv_coo,
+    spmm_coo,
+    degrees,
+    normalize_sym,
+    normalize_rw,
+    symmetrize_coo,
+)

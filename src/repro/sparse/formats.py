@@ -1,0 +1,211 @@
+"""Sparse matrix containers.
+
+All containers are registered dataclass pytrees: array fields are children
+(traced / sharded), structural ints are metadata (static).  Builders are
+host-side numpy code — format construction is data-pipeline work in this
+framework (the paper does it on the GPU with Thrust; on a pod the input
+pipeline runs on hosts, and the device-side formats below are what the
+kernels consume).
+
+Formats
+-------
+COO        (row, col, val)            — construction + segment-sum SpMV.
+CSR        (indptr, indices, data)    — compact storage, row slicing; SpMV in
+                                        JAX still wants per-nnz row ids, so we
+                                        keep an optional row array alongside.
+BlockELL   rows grouped in blocks of ``block_rows``; every row padded to the
+           block's width bucket — the TPU-native layout for the Pallas SpMV
+           kernel (dense strided loads instead of irregular gathers).
+           Out-of-width overflow entries spill to a COO tail (HYB layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """Coordinate-format sparse matrix (the paper's Alg. 1 output format)."""
+
+    row: jax.Array  # [nnz] int32
+    col: jax.Array  # [nnz] int32
+    val: jax.Array  # [nnz] float
+    shape: Tuple[int, int]  # static
+
+    @property
+    def nnz(self) -> int:
+        return self.row.shape[0]
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+
+_register(COO, ["row", "col", "val"], ["shape"])
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row.  ``row`` is kept (redundantly) because JAX
+    segment reductions want per-nnz segment ids; it costs nnz int32 and buys
+    O(1) conversion back to the segment-sum SpMV path."""
+
+    indptr: jax.Array  # [n_rows+1] int32
+    indices: jax.Array  # [nnz] int32
+    data: jax.Array  # [nnz] float
+    row: jax.Array  # [nnz] int32  (expanded indptr)
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+
+_register(CSR, ["indptr", "indices", "data", "row"], ["shape"])
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockELL:
+    """Blocked-ELL + COO-tail hybrid (TPU-native SpMV layout).
+
+    Rows are grouped into blocks of ``block_rows`` consecutive rows.  Within a
+    block every row is padded to ``width`` slots (the global ELL width chosen
+    at build time, e.g. the 90th-percentile degree rounded up to a lane
+    multiple).  Entries beyond ``width`` spill into a COO tail, handled by the
+    segment-sum path.  Padding slots have ``col = 0`` and ``val = 0`` so they
+    contribute nothing.
+
+    cols : [n_blocks, block_rows, width] int32
+    vals : [n_blocks, block_rows, width] float
+    tail : COO with the overflow entries (may be empty)
+    """
+
+    cols: jax.Array
+    vals: jax.Array
+    tail: COO
+    shape: Tuple[int, int]
+    block_rows: int
+    width: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.cols.shape[0]
+
+
+_register(BlockELL, ["cols", "vals", "tail"], ["shape", "block_rows", "width"])
+
+
+# ---------------------------------------------------------------------------
+# Host-side builders (numpy; run in the data pipeline, not inside jit)
+# ---------------------------------------------------------------------------
+
+def coo_from_edges(
+    row: np.ndarray,
+    col: np.ndarray,
+    val: np.ndarray,
+    shape: Tuple[int, int],
+    *,
+    sort: bool = True,
+    sum_duplicates: bool = False,
+    dtype=jnp.float32,
+) -> COO:
+    """Build a COO matrix from edge arrays, optionally row-major sorted.
+
+    Sorting by (row, col) is what makes the downstream segment_sum efficient
+    (``indices_are_sorted=True``) and what the CSR/ELL converters require.
+    """
+    row = np.asarray(row, np.int32)
+    col = np.asarray(col, np.int32)
+    val = np.asarray(val)
+    if sort:
+        order = np.lexsort((col, row))
+        row, col, val = row[order], col[order], val[order]
+    if sum_duplicates and row.size:
+        key = row.astype(np.int64) * shape[1] + col
+        uniq, inv = np.unique(key, return_inverse=True)
+        val = np.bincount(inv, weights=val.astype(np.float64), minlength=uniq.size)
+        row = (uniq // shape[1]).astype(np.int32)
+        col = (uniq % shape[1]).astype(np.int32)
+    return COO(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype), shape)
+
+
+def coo_to_csr(m: COO) -> CSR:
+    """COO (row-sorted) → CSR.  The paper's Alg. 2 step 4 (cusparseXcoo2csr)."""
+    row = np.asarray(m.row)
+    n_rows = m.shape[0]
+    counts = np.bincount(row, minlength=n_rows)
+    indptr = np.zeros(n_rows + 1, np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    return CSR(
+        indptr=jnp.asarray(indptr),
+        indices=m.col,
+        data=m.val,
+        row=m.row,
+        shape=m.shape,
+    )
+
+
+def csr_to_blockell(
+    m: CSR,
+    *,
+    block_rows: int = 8,
+    width: int | None = None,
+    width_quantile: float = 0.95,
+    lane_multiple: int = 8,
+) -> BlockELL:
+    """CSR → BlockELL(+COO tail).
+
+    ``width`` defaults to the ``width_quantile`` of row degrees rounded up to
+    ``lane_multiple`` — the classic HYB split: common rows go dense-padded,
+    heavy-tail rows spill to COO.
+    """
+    indptr = np.asarray(m.indptr)
+    indices = np.asarray(m.indices)
+    data = np.asarray(m.data)
+    n_rows, _ = m.shape
+    deg = np.diff(indptr)
+    if width is None:
+        q = int(np.quantile(deg, width_quantile)) if n_rows else lane_multiple
+        width = max(lane_multiple, int(np.ceil(max(q, 1) / lane_multiple) * lane_multiple))
+    n_blocks = (n_rows + block_rows - 1) // block_rows
+    pad_rows = n_blocks * block_rows
+
+    cols = np.zeros((pad_rows, width), np.int32)
+    vals = np.zeros((pad_rows, width), data.dtype)
+    tail_r, tail_c, tail_v = [], [], []
+    for r in range(n_rows):
+        lo, hi = indptr[r], indptr[r + 1]
+        take = min(hi - lo, width)
+        cols[r, :take] = indices[lo : lo + take]
+        vals[r, :take] = data[lo : lo + take]
+        if hi - lo > width:
+            tail_r.append(np.full(hi - lo - width, r, np.int32))
+            tail_c.append(indices[lo + width : hi])
+            tail_v.append(data[lo + width : hi])
+    if tail_r:
+        tr = np.concatenate(tail_r)
+        tc = np.concatenate(tail_c)
+        tv = np.concatenate(tail_v)
+    else:  # keep a 1-element dummy so shapes stay non-degenerate under jit
+        tr = np.zeros(1, np.int32)
+        tc = np.zeros(1, np.int32)
+        tv = np.zeros(1, data.dtype)
+    tail = COO(jnp.asarray(tr), jnp.asarray(tc), jnp.asarray(tv), m.shape)
+    return BlockELL(
+        cols=jnp.asarray(cols.reshape(n_blocks, block_rows, width)),
+        vals=jnp.asarray(vals.reshape(n_blocks, block_rows, width)),
+        tail=tail,
+        shape=m.shape,
+        block_rows=block_rows,
+        width=width,
+    )

@@ -1,0 +1,4 @@
+"""Training runtime: train state, step builders, fault-tolerant loop."""
+
+from repro.train.state import TrainState, make_train_step  # noqa: F401
+from repro.train.loop import TrainLoopConfig, run_training  # noqa: F401

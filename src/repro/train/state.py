@@ -1,0 +1,74 @@
+"""Train state + step builders (loss → grads → clip → AdamW, all jit-side).
+
+``make_train_step`` returns a pure (state, batch) → (state, metrics)
+function ready for ``jax.jit`` with donated state.  Optional microbatch
+gradient accumulation (``accum_steps``) trades HBM for batch size — the
+standard remat/accum knob the §Perf loop exercises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+    step: Array
+
+
+jax.tree_util.register_dataclass(TrainState, ["params", "opt", "step"], [])
+
+
+def init_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Dict[str, Array]], Array],
+    opt_cfg: AdamWConfig,
+    *,
+    accum_steps: int = 1,
+    accum_unroll: bool = False,  # dry-run cost pass: exact loop accounting
+):
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch: Dict[str, Array]):
+        if accum_steps == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            # microbatch accumulation: batch leading dim must split evenly
+            def split(x):
+                return x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                loss_sum, acc = carry
+                l, g = grads_of(state.params, mb)
+                return (loss_sum + l, jax.tree.map(jnp.add, acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zeros), micro,
+                unroll=accum_steps if accum_unroll else 1,
+            )
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        params, opt, om = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return step

@@ -1,0 +1,141 @@
+"""Multi-device semantics (8 virtual CPU devices via a subprocess — the
+main test process must keep the default single device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=480,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+def test_sharded_spmv_matches_dense():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.sparse.formats import coo_from_edges
+        from repro.sparse.distributed import (partition_coo_by_rows,
+            make_sharded_spmv, shard_edges, shard_vector, spmv_gspmd)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        n = 64
+        W = (rng.random((n,n)) < 0.2) * rng.random((n,n)).astype(np.float32)
+        r, c = np.nonzero(W)
+        coo = coo_from_edges(r, c, W[r,c], (n,n))
+        sm = partition_coo_by_rows(coo, 4)
+        sm = shard_edges(mesh, sm, "data")
+        x = rng.normal(size=(sm.shape[0],)).astype(np.float32)
+        xs = shard_vector(mesh, jnp.asarray(x), "data")
+        spmv = make_sharded_spmv(mesh, sm, axis="data")
+        y = jax.jit(spmv)(sm.row_local, sm.col, sm.val, xs)
+        np.testing.assert_allclose(np.asarray(y)[:n], W @ x[:n], rtol=1e-4, atol=1e-5)
+        yg = jax.jit(lambda s, v: spmv_gspmd(s, v))(sm, xs)
+        np.testing.assert_allclose(np.asarray(yg)[:n], W @ x[:n], rtol=1e-4, atol=1e-5)
+        print("SPMV-OK")
+    """))
+
+
+def test_distributed_spectral_pipeline_recovers_sbm():
+    print(_run("""
+        import numpy as np, jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.data.sbm import sbm_graph
+        from repro.sparse.distributed import partition_coo_by_rows, shard_edges
+        from repro.core.pipeline import SpectralClusteringConfig
+        from repro.core.distributed_pipeline import spectral_cluster_sharded
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        coo, truth = sbm_graph(64, 4, 0.35, 0.01, seed=5)
+        sm = shard_edges(mesh, partition_coo_by_rows(coo, 4), "data")
+        cfg = SpectralClusteringConfig(n_clusters=4, kmeans_assign="ref")
+        for variant in ("gspmd", "shard_map"):
+            out = jax.jit(lambda s, k: spectral_cluster_sharded(
+                s, cfg, k, variant=variant, mesh=mesh, axis=("data",)))(
+                sm, jax.random.PRNGKey(0))
+            lab = np.asarray(out.labels)[:256]
+            # purity
+            pur = 0
+            for c in np.unique(lab):
+                vals, counts = np.unique(truth[lab==c], return_counts=True)
+                pur += counts.max()
+            assert pur / 256 > 0.95, (variant, pur / 256)
+        print("PIPELINE-OK")
+    """))
+
+
+def test_moe_shard_map_matches_gspmd_reference():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models.moe import MoEConfig, init_moe_params, moe_ffn_gspmd, moe_ffn_shard_map
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16, capacity_factor=8.0)
+        d, T = 32, 64
+        p = init_moe_params(jax.random.PRNGKey(0), d, cfg, 1, jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], p)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, d), jnp.float32)
+        y_ref, _ = moe_ffn_gspmd(lp, x, cfg)   # huge capacity => no drops
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+        lps = {
+            "router": jax.device_put(lp["router"], NamedSharding(mesh, P())),
+            "w_gate": jax.device_put(lp["w_gate"], NamedSharding(mesh, P("model"))),
+            "w_up": jax.device_put(lp["w_up"], NamedSharding(mesh, P("model"))),
+            "w_down": jax.device_put(lp["w_down"], NamedSharding(mesh, P("model"))),
+        }
+        y_sm, _ = jax.jit(lambda p_, x_: moe_ffn_shard_map(p_, x_, cfg, mesh))(lps, xs)
+        np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+        print("MOE-OK")
+    """))
+
+
+def test_compressed_psum_mean():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.optim.compress import compressed_psum_mean
+        mesh = jax.make_mesh((8,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 128), jnp.float32)
+        r = jnp.zeros((8, 128), jnp.float32)
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+                 out_specs=(P("data"), P("data")))
+        def f(gl, rl):
+            m, nr = compressed_psum_mean(gl[0], rl[0], "data")
+            return m[None], nr[None]
+        mean, resid = jax.jit(f)(g, r)
+        want = np.asarray(g).mean(0)
+        got = np.asarray(mean)[0]
+        scale = np.abs(np.asarray(g)).max() / 127
+        assert np.abs(got - want).max() < scale, (np.abs(got-want).max(), scale)
+        print("COMPRESS-OK")
+    """))
+
+
+def test_elastic_resharding():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.ckpt.elastic import plan_elastic_mesh, reshard_tree
+        from repro.launch.sharding import logical_spec as L
+        from repro.launch.mesh import rules_for_mesh
+        # job "restarts" with 6 of 8 devices, model axis kept at 2
+        mesh = plan_elastic_mesh(6, 2)
+        assert mesh.devices.shape == (3, 2)
+        tree = {"w": jnp.arange(24, dtype=jnp.float32).reshape(6, 4)}
+        logical = {"w": L((None, "mlp"))}
+        out = reshard_tree(tree, logical, rules_for_mesh(mesh), mesh)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+        assert len(out["w"].sharding.device_set) >= 2
+        print("ELASTIC-OK")
+    """))

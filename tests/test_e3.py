@@ -1,0 +1,136 @@
+"""E(3) substrate ground truth: SH orthonormality, Gaunt consistency,
+Wigner-D homomorphism/equivariance, CG selection rules, model equivariance."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.gnn import e3
+
+
+def _rotmat(a, b, c):
+    def Rz(t):
+        co, si = np.cos(t), np.sin(t)
+        return np.array([[co, -si, 0], [si, co, 0], [0, 0, 1]])
+
+    def Ry(t):
+        co, si = np.cos(t), np.sin(t)
+        return np.array([[co, 0, si], [0, 1, 0], [-si, 0, co]])
+
+    return Rz(a) @ Ry(b) @ Rz(c)
+
+
+def _euler(R):
+    b = np.arccos(np.clip(R[2, 2], -1, 1))
+    return np.arctan2(R[1, 2], R[0, 2]), b, np.arctan2(R[2, 1], -R[2, 0])
+
+
+def _D(l, R):
+    a, b, c = _euler(R)
+    Dab = np.asarray(e3.real_wigner_D(l, jnp.asarray([a], jnp.float32), jnp.asarray([b], jnp.float32)))[0]
+    Dc = np.asarray(e3.real_wigner_D(l, jnp.asarray([c], jnp.float32), jnp.asarray([0.0], jnp.float32)))[0]
+    return Dab @ Dc
+
+
+def test_sh_orthonormal():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(200000, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Ys = e3.real_sph_harm(3, jnp.asarray(v, jnp.float32))
+    Y = np.concatenate([np.asarray(y) for y in Ys], axis=1)
+    G = 4 * np.pi * (Y.T @ Y) / len(v)
+    assert np.abs(G - np.eye(16)).max() < 0.02  # MC tolerance
+
+
+@pytest.mark.parametrize("path", [(1, 1, 2), (1, 1, 0), (2, 1, 1), (2, 2, 2)])
+def test_gaunt_identity(path):
+    """CG[a,b,c]·Y_{l1,a}(v)·Y_{l2,b}(v) ∝ Y_{l3,c}(v) pointwise — the
+    strongest available consistency check between SH and CG conventions."""
+    l1, l2, l3 = path
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(512, 3)).astype(np.float32)
+    C = e3.real_cg(l1, l2, l3)
+    y1 = np.asarray(e3.real_sph_harm(l1, jnp.asarray(v))[l1])
+    y2 = np.asarray(e3.real_sph_harm(l2, jnp.asarray(v))[l2])
+    y3 = np.asarray(e3.real_sph_harm(l3, jnp.asarray(v))[l3])
+    lhs = np.einsum("abc,na,nb->nc", C, y1, y2)
+    const = (lhs * y3).sum(1) / (y3 * y3).sum(1)
+    assert const.std() < 1e-5
+    assert np.abs(lhs - const[:, None] * y3).max() < 1e-5
+
+
+def test_cg_111_is_cross_product():
+    C = e3.real_cg(1, 1, 1)
+    rng = np.random.default_rng(2)
+    # real l=1 basis is (y, z, x); check bilinear map ∝ cross product
+    for _ in range(5):
+        u3, w3 = rng.normal(size=3), rng.normal(size=3)
+        u = np.array([u3[1], u3[2], u3[0]])
+        w = np.array([w3[1], w3[2], w3[0]])
+        out = np.einsum("abc,a,b->c", C, u, w)
+        out_xyz = np.array([out[2], out[0], out[1]])
+        cross = np.cross(u3, w3)
+        ratio = out_xyz / np.where(np.abs(cross) > 1e-9, cross, 1.0)
+        mask = np.abs(cross) > 1e-9
+        assert np.abs(ratio[mask] - ratio[mask][0]).max() < 1e-5
+
+
+@pytest.mark.parametrize("l", [1, 2, 4, 6])
+def test_wigner_equivariance_and_homomorphism(l):
+    R1 = _rotmat(0.3, 1.2, -0.7)
+    R2 = _rotmat(-1.1, 0.4, 2.0)
+    err_h = np.abs(_D(l, R1 @ R2) - _D(l, R1) @ _D(l, R2)).max()
+    assert err_h < 5e-6
+    rng = np.random.default_rng(l)
+    v = rng.normal(size=(100, 3)).astype(np.float32)
+    Yv = np.asarray(e3.real_sph_harm(l, jnp.asarray(v))[l])
+    YRv = np.asarray(e3.real_sph_harm(l, jnp.asarray(v @ R1.T.astype(np.float32)))[l])
+    assert np.abs(YRv - Yv @ _D(l, R1).T).max() < 5e-6
+
+
+def test_edge_alignment_concentrates_on_zhat():
+    rng = np.random.default_rng(4)
+    vecs = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+    al, be = e3.edge_alignment_angles(vecs)
+    for l in (1, 2, 3):
+        Yv = e3.real_sph_harm(l, vecs)[l]
+        D = e3.real_wigner_D(l, al, be)
+        aligned = jnp.einsum("nsr,nr->ns", D.transpose(0, 2, 1), Yv)
+        zhat = e3.real_sph_harm(l, jnp.asarray([[0.0, 0.0, 1.0]]))[l][0]
+        assert float(jnp.abs(aligned - zhat[None]).max()) < 1e-5
+
+
+@pytest.mark.parametrize("model", ["nequip", "equiformer"])
+def test_model_rotation_invariance(model):
+    from repro.models.gnn.graph import GraphBatch
+
+    rng = np.random.default_rng(0)
+    n, e = 24, 60
+    pos = rng.normal(size=(n, 3)).astype(np.float32) * 2
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    species = rng.integers(0, 5, n).astype(np.int32)
+
+    def mk(p):
+        return GraphBatch(
+            node_feat=jnp.zeros((n, 1)), edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+            edge_mask=jnp.ones((e,)), labels=jnp.zeros((1,)), label_mask=jnp.ones((1,)),
+            positions=jnp.asarray(p), species=jnp.asarray(species),
+            graph_id=jnp.zeros((n,), jnp.int32), n_graphs=1,
+        )
+
+    R = _rotmat(0.5, 0.9, 1.3).astype(np.float32)
+    if model == "nequip":
+        from repro.models.gnn.nequip import NequIPConfig, init_params, loss
+
+        cfg = NequIPConfig(n_layers=2, channels=8, n_species=5)
+    else:
+        from repro.models.gnn.equiformer_v2 import EquiformerV2Config, init_params, loss
+
+        cfg = EquiformerV2Config(n_layers=2, channels=16, l_max=3, m_max=2, n_heads=4, n_species=5)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    l1 = float(loss(params, mk(pos), cfg))
+    l2 = float(loss(params, mk(pos @ R.T + 5.0), cfg))
+    assert abs(l1 - l2) < 5e-5 * max(abs(l1), 1.0)

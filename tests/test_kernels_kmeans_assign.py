@@ -1,0 +1,97 @@
+"""Per-kernel validation: fused k-means assignment vs pure-jnp oracle.
+
+Shape/dtype sweeps + hypothesis property tests, all under interpret=True
+(the kernel body executes in Python on CPU; TPU is the deployment target).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+
+def _check(n, k, d, dtype, block_q=256, block_k=128, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype)
+    l_ker, d_ker = kmeans_assign(x, c, impl="pallas", interpret=True, block_q=block_q, block_k=block_k)
+    l_ref, d_ref = kmeans_assign_ref(x, c)
+    # labels must match except at genuine distance ties
+    mism = np.asarray(l_ker) != np.asarray(l_ref)
+    if mism.any():
+        np.testing.assert_allclose(
+            np.asarray(d_ker)[mism], np.asarray(d_ref)[mism], rtol=1e-4, atol=1e-4
+        )
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "n,k,d",
+    [
+        (8, 2, 1),  # degenerate-small
+        (128, 16, 8),  # aligned
+        (1000, 37, 90),  # paper's DTI d=90, odd k
+        (513, 500, 33),  # large-k regime the paper targets, unaligned n
+        (257, 129, 257),  # everything unaligned
+    ],
+)
+def test_shapes_fp32(n, k, d):
+    _check(n, k, d, jnp.float32)
+
+
+@pytest.mark.parametrize("n,k,d", [(256, 64, 32), (300, 100, 100)])
+def test_bf16_inputs(n, k, d):
+    """bf16 storage, fp32 accumulation: labels may differ only at near-ties."""
+    rng = np.random.default_rng(3)
+    x32 = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c32 = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    l_ker, d_ker = kmeans_assign(
+        x32.astype(jnp.bfloat16), c32.astype(jnp.bfloat16), impl="pallas", interpret=True
+    )
+    l_ref, d_ref = kmeans_assign_ref(x32, c32)
+    agree = (np.asarray(l_ker) == np.asarray(l_ref)).mean()
+    assert agree > 0.97, f"bf16 label agreement too low: {agree}"
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref), rtol=0.1, atol=0.1)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 128), (64, 128), (256, 256), (512, 512)])
+def test_block_shape_sweep(block_q, block_k):
+    _check(640, 384, 48, jnp.float32, block_q=block_q, block_k=block_k, seed=7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 300),
+    k=st.integers(2, 64),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_ref(n, k, d, seed):
+    _check(n, k, d, jnp.float32, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 200), k=st.integers(2, 32), d=st.integers(1, 32), seed=st.integers(0, 10**6))
+def test_property_argmin_is_true_min(n, k, d, seed):
+    """Invariant: reported dist² equals the true minimum over centroids, and
+    the reported label attains it."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    labels, dist2 = kmeans_assign(jnp.asarray(x), jnp.asarray(c), impl="pallas", interpret=True)
+    labels, dist2 = np.asarray(labels), np.asarray(dist2)
+    full = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(dist2, full.min(1), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(full[np.arange(n), labels], full.min(1), rtol=1e-3, atol=1e-4)
+
+
+def test_padded_centroids_never_win():
+    """k not a multiple of block_k: the +inf-norm padding rows must not leak."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)  # heavy padding to 128
+    labels, _ = kmeans_assign(x, c, impl="pallas", interpret=True)
+    assert int(np.asarray(labels).max()) < 3

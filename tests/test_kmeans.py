@@ -1,0 +1,86 @@
+"""k-means / k-means++ (paper Alg. 4-5) behaviour tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import (
+    KMeansConfig, assign_ref, kmeans, kmeanspp_init, update_centroids,
+)
+
+
+def _blobs(k, n_per, d, spread=0.25, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 6
+    X = np.concatenate([centers[i] + rng.normal(size=(n_per, d)) * spread for i in range(k)])
+    labels = np.repeat(np.arange(k), n_per)
+    return X.astype(np.float32), labels, centers.astype(np.float32)
+
+
+def _purity(pred, truth):
+    from collections import Counter
+
+    return sum(Counter(truth[pred == i]).most_common(1)[0][1]
+               for i in np.unique(pred)) / len(truth)
+
+
+@pytest.mark.parametrize("update", ["matmul", "segment"])
+def test_recovers_blobs(update):
+    X, truth, _ = _blobs(6, 300, 8)
+    res = jax.jit(lambda x, key: kmeans(x, KMeansConfig(k=6, update=update, assign="ref"), key))(
+        jnp.asarray(X), jax.random.PRNGKey(0)
+    )
+    assert _purity(np.asarray(res.labels), truth) > 0.98
+    assert int(res.shifted) == 0  # converged
+
+
+def test_update_variants_agree():
+    X, truth, _ = _blobs(4, 100, 5)
+    labels, _ = assign_ref(jnp.asarray(X), jnp.asarray(X[:4]))
+    prev = jnp.zeros((4, 5), jnp.float32)
+    a = update_centroids(jnp.asarray(X), labels, 4, prev, how="matmul")
+    b = update_centroids(jnp.asarray(X), labels, 4, prev, how="segment")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_empty_cluster_keeps_previous_centroid():
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(20, 3)), jnp.float32)
+    labels = jnp.zeros((20,), jnp.int32)  # everything in cluster 0
+    prev = jnp.full((3, 3), 7.0)
+    c = update_centroids(X, labels, 3, prev)
+    np.testing.assert_allclose(np.asarray(c[1:]), 7.0)
+
+
+def test_kmeanspp_spreads_seeds():
+    """++ seeding must pick one seed per well-separated blob (w.h.p.)."""
+    X, truth, centers = _blobs(8, 200, 4, spread=0.05, seed=3)
+    C = np.asarray(kmeanspp_init(jnp.asarray(X), 8, jax.random.PRNGKey(0)))
+    d2 = ((C[:, None, :] - centers[None]) ** 2).sum(-1)
+    owners = d2.argmin(1)
+    assert len(set(owners.tolist())) == 8  # all blobs covered
+
+
+def test_kmeanspp_beats_random_init_inertia():
+    X, *_ = _blobs(16, 100, 6, spread=0.3, seed=5)
+    x = jnp.asarray(X)
+    r_pp = kmeans(x, KMeansConfig(k=16, init="kmeans++", max_iters=3, assign="ref"), jax.random.PRNGKey(2))
+    r_rd = kmeans(x, KMeansConfig(k=16, init="random", max_iters=3, assign="ref"), jax.random.PRNGKey(2))
+    assert float(r_pp.inertia) <= float(r_rd.inertia) * 1.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 200), k=st.integers(2, 8), d=st.integers(1, 10), seed=st.integers(0, 10**6))
+def test_property_lloyd_never_increases_inertia(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    key = jax.random.PRNGKey(seed % 13)
+    prev_inertia = None
+    C = kmeanspp_init(x, k, key)
+    for _ in range(4):
+        labels, dmin = assign_ref(x, C)
+        inertia = float(dmin.sum())
+        if prev_inertia is not None:
+            assert inertia <= prev_inertia * (1 + 1e-4)
+        prev_inertia = inertia
+        C = update_centroids(x, labels, k, C)

@@ -1,0 +1,81 @@
+"""Eigensolver vs numpy.linalg.eigh oracles + invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lanczos import LanczosConfig, lanczos_topk
+from repro.sparse.formats import coo_from_edges
+from repro.sparse.ops import normalize_sym, spmv_coo
+
+
+def _sym_sparse(n, density, seed):
+    rng = np.random.default_rng(seed)
+    W = (rng.random((n, n)) < density) * rng.random((n, n)).astype(np.float32)
+    W = np.triu(W, 1)
+    W = W + W.T
+    r, c = np.nonzero(W)
+    return W, coo_from_edges(r, c, W[r, c], (n, n))
+
+
+@pytest.mark.parametrize("n,k,m", [(120, 4, 24), (200, 8, 32), (150, 12, 40)])
+def test_topk_eigs_match_numpy(n, k, m):
+    W, coo = _sym_sparse(n, 0.08, seed=n)
+    adj = normalize_sym(coo)
+    dense = np.zeros((n, n))
+    dense[np.asarray(adj.row), np.asarray(adj.col)] = np.asarray(adj.val)
+    want = np.linalg.eigvalsh(dense)[::-1][:k]
+    res = jax.jit(
+        lambda key: lanczos_topk(lambda x: spmv_coo(adj, x), n,
+                                 LanczosConfig(k=k, m=m, tol=1e-6, max_restarts=80), key=key)
+    )(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), want, rtol=2e-4, atol=2e-5)
+    assert bool(res.converged)
+    # eigenvector residuals ‖Av − λv‖
+    V = np.asarray(res.eigenvectors)
+    resid = np.abs(dense @ V - V * np.asarray(res.eigenvalues)[None, :]).max()
+    assert resid < 5e-4
+    # orthonormal basis
+    np.testing.assert_allclose(V.T @ V, np.eye(k), atol=5e-4)
+
+
+def test_smallest_algebraic_mode():
+    W, coo = _sym_sparse(100, 0.1, seed=5)
+    adj = normalize_sym(coo)
+    dense = np.zeros((100, 100))
+    dense[np.asarray(adj.row), np.asarray(adj.col)] = np.asarray(adj.val)
+    want = np.linalg.eigvalsh(dense)[:4]
+    res = lanczos_topk(lambda x: spmv_coo(adj, x), 100,
+                       LanczosConfig(k=4, m=24, which="SA", tol=1e-6, max_restarts=80),
+                       key=jax.random.PRNGKey(1))
+    got = np.sort(np.asarray(res.eigenvalues))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=5e-5)
+
+
+def test_fixed_restarts_static_mode_matches():
+    """The dry-run's fixed-trip-count mode gives the same answer."""
+    W, coo = _sym_sparse(150, 0.08, seed=9)
+    adj = normalize_sym(coo)
+    mv = lambda x: spmv_coo(adj, x)
+    a = lanczos_topk(mv, 150, LanczosConfig(k=6, m=30, max_restarts=50, tol=1e-6),
+                     key=jax.random.PRNGKey(0))
+    b = lanczos_topk(mv, 150, LanczosConfig(k=6, m=30, fixed_restarts=10),
+                     key=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(a.eigenvalues), np.asarray(b.eigenvalues),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(40, 150), seed=st.integers(0, 10**6))
+def test_property_eigenvalues_within_gershgorin(n, seed):
+    """Normalized adjacency spectrum must lie in [-1, 1]; returned values
+    sorted descending; residual estimates small for converged runs."""
+    W, coo = _sym_sparse(n, 0.1, seed=seed)
+    adj = normalize_sym(coo)
+    res = lanczos_topk(lambda x: spmv_coo(adj, x), n,
+                       LanczosConfig(k=4, m=min(n - 1, 20), tol=1e-5, max_restarts=60),
+                       key=jax.random.PRNGKey(seed % 17))
+    vals = np.asarray(res.eigenvalues)
+    assert (vals <= 1.0 + 1e-4).all() and (vals >= -1.0 - 1e-4).all()
+    assert (np.diff(vals) <= 1e-5).all()

@@ -1,0 +1,74 @@
+"""Optimizer + gradient-compression behaviour."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm, schedule
+from repro.optim.compress import compress_int8, decompress_int8, ef_compress
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=0)
+    p = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    opt = adamw_init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}  # d/dw of ||w||²
+        p, opt, m = adamw_update(p, g, opt, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0)
+    p = {"w": jnp.zeros((3,))}
+    opt = adamw_init(p)
+    g = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    _, _, metrics = adamw_update(p, g, opt, cfg)
+    assert float(metrics["grad_norm"]) > 99  # reported unclipped
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    s = [float(schedule(cfg, jnp.asarray(i))) for i in (0, 5, 10, 55, 100)]
+    assert s[0] == 0.0 and abs(s[1] - 0.5) < 1e-6 and abs(s[2] - 1.0) < 1e-6
+    assert s[2] > s[3] > s[4] >= 0.1 - 1e-6
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)) * 5, jnp.float32)
+    q, s = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6  # half-ULP of the quantizer
+
+
+def test_error_feedback_converges():
+    """EF invariant: sum of transmitted values tracks sum of true gradients
+    (residual stays bounded) — the property that preserves SGD convergence."""
+    rng = np.random.default_rng(1)
+    resid = jnp.zeros((64,))
+    sent_total = jnp.zeros((64,))
+    true_total = jnp.zeros((64,))
+    for i in range(50):
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        q, s, resid = ef_compress(g, resid)
+        sent_total = sent_total + decompress_int8(q, s)
+        true_total = true_total + g
+    # residual bounded by one quantization step, totals match up to it
+    drift = float(jnp.abs(sent_total + resid - true_total).max())
+    assert drift < 1e-4
+    assert float(jnp.abs(resid).max()) < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), scale=st.floats(1e-3, 1e3))
+def test_property_compression_relative_error(seed, scale):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(256,)) * scale, jnp.float32)
+    q, s = compress_int8(x)
+    rel = float(jnp.abs(decompress_int8(q, s) - x).max() / jnp.abs(x).max())
+    assert rel <= 1.0 / 127 + 1e-6
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

@@ -1,0 +1,78 @@
+"""End-to-end spectral clustering behaviour (paper Fig. 2 / §V quality)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from repro.data.sbm import sbm_graph
+
+
+def _nmi(a, b):
+    """Normalized mutual information (no sklearn available)."""
+    a, b = np.asarray(a), np.asarray(b)
+    n = len(a)
+    ua, ub = np.unique(a), np.unique(b)
+    mi = 0.0
+    for x in ua:
+        for y in ub:
+            pxy = np.mean((a == x) & (b == y))
+            if pxy == 0:
+                continue
+            px, py = np.mean(a == x), np.mean(b == y)
+            mi += pxy * np.log(pxy / (px * py))
+    ha = -sum(np.mean(a == x) * np.log(np.mean(a == x)) for x in ua)
+    hb = -sum(np.mean(b == y) * np.log(np.mean(b == y)) for y in ub)
+    return mi / max(np.sqrt(ha * hb), 1e-12)
+
+
+@pytest.mark.parametrize("r,n_per", [(4, 150), (8, 100)])
+def test_sbm_recovery(r, n_per):
+    coo, truth = sbm_graph(n_per, r, 0.3, 0.01, seed=r)
+    cfg = SpectralClusteringConfig(n_clusters=r)
+    out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(coo, jax.random.PRNGKey(0))
+    assert _nmi(out.labels, truth) > 0.95
+    # eigengap structure: first eigenvalue ~0 (trivial), gap after r
+    ev = np.asarray(out.eigenvalues)
+    assert ev[0] < 1e-3
+    assert (ev[:r] < 0.5).all()
+
+
+def test_weighted_graph_and_kmeans_assign_paths_agree():
+    coo, truth = sbm_graph(80, 5, 0.4, 0.01, seed=11, weighted=True)
+    base = SpectralClusteringConfig(n_clusters=5, kmeans_assign="ref")
+    out1 = spectral_cluster(coo, base, jax.random.PRNGKey(1))
+    out2 = spectral_cluster(
+        coo,
+        SpectralClusteringConfig(n_clusters=5, kmeans_assign="auto"),
+        jax.random.PRNGKey(1),
+    )
+    assert _nmi(out1.labels, truth) > 0.95
+    assert _nmi(out1.labels, out2.labels) > 0.99
+
+
+def test_distributed_pipeline_matches_single_device():
+    """ShardedCOO + gspmd matvec on 1 device == plain pipeline labels."""
+    from repro.core.distributed_pipeline import spectral_cluster_sharded
+    from repro.sparse.distributed import partition_coo_by_rows
+
+    coo, truth = sbm_graph(100, 4, 0.3, 0.01, seed=21)
+    cfg = SpectralClusteringConfig(n_clusters=4, kmeans_assign="ref")
+    sm = partition_coo_by_rows(coo, 4)
+    out = jax.jit(lambda s, key: spectral_cluster_sharded(s, cfg, key))(sm, jax.random.PRNGKey(0))
+    labels = np.asarray(out.labels)[:400]  # drop padding rows
+    assert _nmi(labels, truth) > 0.95
+
+
+def test_similarity_stage_feeds_pipeline():
+    """Stage 1 (points → graph) + Stages 2-3 recover planted regions."""
+    from repro.core.similarity import build_similarity_graph
+    from repro.data.pointcloud import dti_like_pointcloud
+
+    pos, profiles, edges, region = dti_like_pointcloud(600, d_profile=24, n_regions=4, seed=2)
+    w = build_similarity_graph(profiles, edges, measure="cross_correlation")
+    cfg = SpectralClusteringConfig(n_clusters=4)
+    out = spectral_cluster(w, cfg, jax.random.PRNGKey(0))
+    # ε-graph spatial clustering of noisy region profiles: strong but not
+    # perfect recovery is expected
+    assert _nmi(out.labels, region) > 0.7

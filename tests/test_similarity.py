@@ -1,0 +1,76 @@
+"""Stage 1 (Alg. 1) similarity construction vs numpy oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.similarity import (
+    build_similarity_graph, edge_similarities, eps_neighbors, knn_edges,
+)
+
+
+def _oracle_crosscorr(x, e):
+    xc = x - x.mean(1, keepdims=True)
+    num = (xc[e[:, 0]] * xc[e[:, 1]]).sum(1)
+    den = np.linalg.norm(xc[e[:, 0]], axis=1) * np.linalg.norm(xc[e[:, 1]], axis=1)
+    return num / np.maximum(den, 1e-12)
+
+
+@pytest.mark.parametrize("measure", ["cosine", "cross_correlation", "exp_decay"])
+def test_edge_similarities_match_oracle(measure):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(50, 16)).astype(np.float32)
+    e = rng.integers(0, 50, size=(200, 2)).astype(np.int32)
+    got = np.asarray(edge_similarities(jnp.asarray(x), jnp.asarray(e), measure=measure, sigma=1.3))
+    if measure == "cross_correlation":
+        want = _oracle_crosscorr(x, e)
+    elif measure == "cosine":
+        want = (x[e[:, 0]] * x[e[:, 1]]).sum(1) / (
+            np.linalg.norm(x[e[:, 0]], axis=1) * np.linalg.norm(x[e[:, 1]], axis=1)
+        )
+    else:
+        want = np.exp(-((x[e[:, 0]] - x[e[:, 1]]) ** 2).sum(1) / (2 * 1.3**2))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_equals_unchunked():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    e = jnp.asarray(rng.integers(0, 64, size=(1000, 2)), jnp.int32)
+    a = edge_similarities(x, e, chunk=10**6)
+    b = edge_similarities(x, e, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_build_graph_is_symmetric_nonnegative_sorted():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(40, 12)).astype(np.float32)
+    e = rng.integers(0, 40, size=(150, 2)).astype(np.int32)
+    e = e[e[:, 0] != e[:, 1]]
+    w = build_similarity_graph(x, e)
+    r, c, v = np.asarray(w.row), np.asarray(w.col), np.asarray(w.val)
+    assert (v > 0).all()
+    dense = np.zeros((40, 40))
+    dense[r, c] = v
+    np.testing.assert_allclose(dense, dense.T, atol=1e-6)
+    assert (np.diff(r) >= 0).all()  # row-sorted
+
+
+def test_eps_neighbors_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(120, 3)).astype(np.float32)
+    e = eps_neighbors(pts, 0.8, block=32)
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    want = {(i, j) for i in range(120) for j in range(i + 1, 120) if d2[i, j] <= 0.64 + 1e-9}
+    got = {tuple(p) for p in e.tolist()}
+    assert got == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 60), k=st.integers(1, 5), seed=st.integers(0, 10**5))
+def test_property_knn_degree(n, k, seed):
+    pts = np.random.default_rng(seed).normal(size=(n, 4)).astype(np.float32)
+    e = knn_edges(pts, min(k, n - 1))
+    # every node appears as a source exactly min(k, n-1) times
+    src_counts = np.bincount(e[:, 0], minlength=n)
+    assert (src_counts == min(k, n - 1)).all()
