@@ -3,17 +3,26 @@
 FB-shaped (4k nodes, k=10) and Syn200-shaped (20k nodes, k reduced for CPU)
 graphs; our on-device restarted Lanczos vs (a) a dense eigh oracle where
 n allows, (b) the per-iteration cost model of Eq. (10).
+
+Additionally sweeps the block-Lanczos width ``b ∈ {1, 2, 4, 8}`` on the
+FB-shaped graph and writes ``BENCH_eigensolver.json`` — restarts, operator
+passes (nnz streams, the HBM/ICI figure of merit, DESIGN.md §3), and
+eigenvalue agreement vs the single-vector run — so the Stage-2 perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core.lanczos import LanczosConfig, lanczos_topk
+from repro.core.lanczos import (LanczosConfig, effective_basis_size, lanczos_topk,
+                                operator_passes)
 from repro.data.sbm import sbm_graph
-from repro.sparse.ops import normalize_sym, spmv_coo
+from repro.sparse.ops import normalize_sym, spmm_coo, spmv_coo
 
 
 def _run(name, n_per, r, k, m):
@@ -27,6 +36,64 @@ def _run(name, n_per, r, k, m):
     emit(f"eigensolver/lanczos_{name}_n{n}_k{k}", us,
          f"restarts={int(res.restarts)};converged={bool(res.converged)}")
     return us
+
+
+def block_sweep(out_path: str = "BENCH_eigensolver.json") -> dict:
+    """Block-Lanczos sweep on the FB-shaped SBM graph.
+
+    The basis widens with the block (m = max(4k, k + 8b), DESIGN.md §3) —
+    block mode trades polynomial degree per basis column for nnz-stream
+    amortization, and the extra columns buy the degree back.
+    """
+    coo, _ = sbm_graph(1010, 4, 0.3, 0.01, seed=1)
+    n = coo.shape[0]
+    adj = normalize_sym(coo)
+    k, tol = 10, 1e-5
+
+    def mv(x):
+        return spmv_coo(adj, x)
+
+    def mm(X):
+        return spmm_coo(adj, X)
+
+    entries = []
+    base_passes, base_ev = None, None
+    for b in (1, 2, 4, 8):
+        m = max(4 * k, k + 8 * b)
+        cfg = LanczosConfig(k=k, m=m, tol=tol, max_restarts=60, block_size=b)
+        fn = jax.jit(lambda key: lanczos_topk(mv, n, cfg, key=key, matmat=mm))
+        us = time_fn(fn, jax.random.PRNGKey(0), iters=1)
+        res = fn(jax.random.PRNGKey(0))
+        restarts = int(res.restarts)
+        passes = operator_passes(cfg, restarts)
+        ev = np.asarray(res.eigenvalues)
+        if base_passes is None:
+            base_passes, base_ev = passes, ev
+        ev_diff = float(np.abs(ev - base_ev).max())
+        speedup = base_passes / passes
+        entries.append({
+            "block_size": b,
+            "m": effective_basis_size(cfg),  # basis the solver actually ran
+            "us_per_call": us,
+            "restarts": restarts,
+            "operator_passes": passes,
+            "passes_speedup_vs_b1": speedup,
+            "max_abs_ev_diff_vs_b1": ev_diff,
+            "converged": bool(res.converged),
+        })
+        emit(f"eigensolver/block_sweep_b{b}_n{n}_k{k}", us,
+             f"restarts={restarts};passes={passes};speedup={speedup:.2f}x;"
+             f"ev_diff={ev_diff:.1e}")
+
+    report = {
+        "benchmark": "eigensolver_block_sweep",
+        "graph": {"name": "sbm_fb_shaped", "n": n, "nnz": int(coo.nnz),
+                  "k": k, "tol": tol},
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
 
 
 def main() -> None:
@@ -48,6 +115,9 @@ def main() -> None:
 
     # Syn200-shaped: 20k nodes (paper k=200; k scaled to 32 for CPU wallclock)
     _run("syn200", 1000, 20, 32, 96)
+
+    # block-Lanczos sweep + JSON perf record
+    block_sweep()
 
 
 if __name__ == "__main__":

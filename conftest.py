@@ -1,0 +1,19 @@
+"""Repo-level pytest config: make ``src`` importable and stub optional deps.
+
+The container image has no ``hypothesis``; the property tests degrade to a
+deterministic sampled sweep via ``tests/_hypothesis_stub.py`` (the real
+package is used whenever it is installed).
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tests._hypothesis_stub import install as _install_hypothesis_stub  # noqa: E402
+
+_install_hypothesis_stub()

@@ -21,12 +21,15 @@ def main() -> None:
     ap.add_argument("--p-in", type=float, default=0.3)
     ap.add_argument("--p-out", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="Lanczos Krylov block width b (>1: multi-vector SpMM mode)")
     args = ap.parse_args()
 
     coo, truth = sbm_graph(args.n_per, args.clusters, args.p_in, args.p_out, seed=args.seed)
     print(f"graph: {coo.shape[0]} nodes, {coo.nnz} directed edges")
 
-    cfg = SpectralClusteringConfig(n_clusters=args.clusters)
+    cfg = SpectralClusteringConfig(n_clusters=args.clusters,
+                                   lanczos_block_size=args.block_size)
     out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(coo, jax.random.PRNGKey(args.seed))
 
     labels = np.asarray(out.labels)

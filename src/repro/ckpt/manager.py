@@ -47,6 +47,7 @@ class CheckpointManager:
         host_leaves = [np.asarray(x) for x in leaves]  # device->host snapshot
         treedef_repr = jax.tree.unflatten(treedef, list(range(len(leaves))))
         if blocking:
+            self.wait()  # serialize with any in-flight async save (same-step race)
             self._write(step, host_leaves, treedef_repr)
         else:
             self.wait()

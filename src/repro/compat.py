@@ -1,0 +1,19 @@
+"""Version compatibility shims (single home — keep all copies here).
+
+``shard_map`` moved to the jax top level (and ``check_rep`` became
+``check_vma``) in jax 0.5; the container pins 0.4.x.  Import from here so
+the next rename is a one-file fix:
+
+    from repro.compat import shard_map, SHARD_MAP_NO_CHECK
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    shard_map = jax.shard_map
+    SHARD_MAP_NO_CHECK = {"check_vma": False}
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+    SHARD_MAP_NO_CHECK = {"check_rep": False}

@@ -12,6 +12,11 @@ destination row block) and runs Stage 2+3 with one of two matvec engines:
   the paper's one-PCIe-transfer-per-iteration design);
   ``gather_dtype=bf16`` halves those ICI bytes (§Perf knob).
 
+With ``cfg.lanczos_block_size = b > 1`` the eigensolver runs in block mode:
+the shard_map engine all-gathers one [n, b] block per operator application
+instead of b single vectors — collective count drops b× along with the
+nnz-stream amortization (DESIGN.md §3-4).
+
 Everything else (Lanczos, k-means) is mesh-agnostic jnp whose collectives
 GSPMD derives from the sharded operands.
 """
@@ -25,9 +30,15 @@ import jax.numpy as jnp
 
 import repro.core.kmeans as km
 import repro.core.lanczos as lz
-from repro.core.pipeline import SpectralClusteringConfig, SpectralResult
+from repro.core.pipeline import SpectralClusteringConfig, SpectralResult, default_basis_size
 import repro.core.laplacian as lap
-from repro.sparse.distributed import ShardedCOO, make_sharded_spmv, spmv_gspmd
+from repro.sparse.distributed import (
+    ShardedCOO,
+    make_sharded_spmm,
+    make_sharded_spmv,
+    spmm_gspmd,
+    spmv_gspmd,
+)
 
 Array = jax.Array
 
@@ -65,23 +76,31 @@ def spectral_cluster_sharded(
     if variant == "shard_map":
         assert mesh is not None, "shard_map variant needs the mesh"
         inner = make_sharded_spmv(mesh, smn, axis=axis, gather_dtype=gather_dtype)
+        inner_mm = make_sharded_spmm(mesh, smn, axis=axis, gather_dtype=gather_dtype)
 
         def matvec(x):
             return inner(smn.row_local, smn.col, smn.val, x)
+
+        def matmat(X):  # one all-gather moves the whole [n, b] block
+            return inner_mm(smn.row_local, smn.col, smn.val, X)
 
     else:
 
         def matvec(x):
             return spmv_gspmd(smn, x)
 
-    m = cfg.lanczos_m or min(n, max(2 * k, k + 16))
+        def matmat(X):
+            return spmm_gspmd(smn, X)
+
+    b = cfg.lanczos_block_size
+    m = cfg.lanczos_m or default_basis_size(n, k, b)
     lcfg = lz.LanczosConfig(
         k=k, m=m, max_restarts=cfg.lanczos_max_restarts, tol=cfg.lanczos_tol,
-        which="LA", fixed_restarts=cfg.fixed_restarts,
+        which="LA", fixed_restarts=cfg.fixed_restarts, block_size=b,
     )
     key, k_eig, k_km = jax.random.split(key, 3)
     v0 = jnp.sqrt(jnp.maximum(deg, 0.0)) + 1e-3
-    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig)
+    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig, matmat=matmat)
 
     isd = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
     h = lap.embed_rows(eig.eigenvectors, isd)

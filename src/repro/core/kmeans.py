@@ -145,8 +145,10 @@ def kmeanspp_init(x: Array, k: int, key: Array) -> Array:
 
 
 def random_init(x: Array, k: int, key: Array) -> Array:
+    """k distinct random rows via ``row_at`` (batched): the dynamic gather
+    ``x[idx]`` would all-gather the row-sharded point matrix under GSPMD."""
     idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
-    return x[idx]
+    return jax.vmap(lambda i: row_at(x, i))(idx).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

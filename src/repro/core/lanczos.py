@@ -24,6 +24,18 @@ exactly the flexibility the paper gets from RCI, minus the PCIe copies.
 
 Complexities match the paper's Eq. (10): per restart O(m³) (eigh)
 + O(n m²) (reorth + basis rotation) + O(nnz·m) (matvecs).
+
+**Block mode** (``LanczosConfig.block_size = b > 1``, DESIGN.md §3): each
+step expands the Krylov basis by ``b`` columns via ONE multi-vector operator
+application (``matmat: [n, b] → [n, b]``), so reaching basis size m streams
+the sparse matrix m/b times instead of m — the dominant HBM/ICI cost of
+Stage 2 drops b×.  All orthogonalization becomes [m+b, n]×[n, b] tall-skinny
+GEMMs on the MXU instead of rank-1 GEMV chains; the in-block orthonormal
+factorization is a [n, b] QR whose R factor is the band coupling block of
+the projected matrix.  The full-coefficient bookkeeping above carries over
+verbatim: T is simply block-banded instead of tridiagonal, and thick restart
+keeps a block-aligned number of Ritz vectors plus the b-column residual
+block.  Single-vector mode remains the ``b = 1`` special case.
 """
 from __future__ import annotations
 
@@ -53,12 +65,56 @@ class LanczosConfig:
     which: str = "LA"  # "LA": largest algebraic (the paper's D^{-1}W case)
     fixed_restarts: Optional[int] = None  # static count (dry-run / benchmark)
     dtype: jnp.dtype = jnp.float32
+    block_size: int = 1  # Krylov block width b (1 = classic single-vector)
 
 
 def default_config(k: int, n: int, **kw) -> LanczosConfig:
     # ARPACK's guidance: ncv >= 2k; cap at n and keep a floor for tiny k.
     m = min(n, max(2 * k, k + 16))
     return LanczosConfig(k=k, m=m, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Static shape/cost helpers (shared by the solver, benchmarks, and tests)
+# ---------------------------------------------------------------------------
+
+def effective_basis_size(cfg: LanczosConfig) -> int:
+    """m rounded up to a multiple of the block size (block steps expand the
+    basis b columns at a time, so the basis must tile evenly)."""
+    b = max(1, cfg.block_size)
+    return ((cfg.m + b - 1) // b) * b
+
+
+def restart_keep_size(cfg: LanczosConfig) -> int:
+    """Number of Ritz vectors retained at a thick restart.
+
+    Single-vector: ARPACK-style k + half the excess.  Block mode rounds the
+    same target UP to a block multiple (the post-restart steps must land
+    exactly on basis size m) and caps at m - b so at least one block step
+    runs per cycle.
+    """
+    b = max(1, cfg.block_size)
+    m = effective_basis_size(cfg)
+    l0 = cfg.k + max(1, (m - cfg.k) // 2)
+    if b == 1:
+        return min(m - 1, l0)
+    return min(m - b, ((l0 + b - 1) // b) * b)
+
+
+def operator_passes(cfg: LanczosConfig, restarts: int) -> int:
+    """Full streams of the sparse operator (SpMV/SpMM applications) executed
+    by a run that performed ``restarts`` cycles (first cycle included).
+
+    Each application streams the entire nnz structure once regardless of the
+    block width, so this is THE figure of merit for HBM/ICI-bound Stage 2:
+    block mode pays (m - l)/b streams per cycle instead of m - l.
+    """
+    b = max(1, cfg.block_size)
+    m = effective_basis_size(cfg)
+    l_keep = restart_keep_size(cfg)
+    first = m // b
+    steady = (m - l_keep) // b
+    return first + max(0, int(restarts) - 1) * steady
 
 
 def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
@@ -70,18 +126,29 @@ def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
 
 
 def lanczos_topk(
-    matvec: Callable[[Array], Array],
+    matvec: Optional[Callable[[Array], Array]],
     n: int,
     cfg: LanczosConfig,
     *,
     v0: Optional[Array] = None,
     key: Optional[Array] = None,
+    matmat: Optional[Callable[[Array], Array]] = None,
 ) -> LanczosResult:
-    """Top-k eigenpairs of the symmetric operator behind ``matvec``.
+    """Top-k eigenpairs of the symmetric operator behind ``matvec``/``matmat``.
 
     ``matvec`` must map an ``[n]`` vector to an ``[n]`` vector and be
-    jit-traceable (it may itself contain shard_map collectives).
+    jit-traceable (it may itself contain shard_map collectives).  With
+    ``cfg.block_size > 1`` the operator contract widens to
+    ``matmat: [n, b] → [n, b]`` — pass one explicitly (e.g. an SpMM) to get
+    the single-pass multi-vector stream; otherwise ``matvec`` is vmapped
+    over columns as a correctness fallback.
     """
+    if cfg.block_size > 1:
+        if matmat is None:
+            assert matvec is not None, "need matvec or matmat"
+            matmat = lambda X: jax.vmap(matvec, in_axes=1, out_axes=1)(X)  # noqa: E731
+        return _lanczos_topk_block(matmat, n, cfg, v0=v0, key=key)
+    assert matvec is not None, "need matvec for block_size=1"
     k, m = cfg.k, cfg.m
     assert 0 < k < m <= n, (k, m, n)
     key = jax.random.PRNGKey(0) if key is None else key
@@ -126,7 +193,7 @@ def lanczos_topk(
         n_conv = conv.sum()
 
         # ---- thick restart: keep l_keep top Ritz pairs + residual vector
-        l_keep = min(m - 1, k + max(1, (m - k) // 2))
+        l_keep = restart_keep_size(cfg)
         keep = slice(m - l_keep, m)
         Y = (S[:, keep].T @ V[:m]).astype(f32)  # [l_keep, n] Ritz vectors
         V_new = jnp.zeros_like(V)
@@ -142,7 +209,7 @@ def lanczos_topk(
     V0 = jnp.zeros((m + 1, n), f32).at[0].set(v0)
     T0 = jnp.zeros((m + 1, m + 1), f32)
 
-    l_keep_static = min(m - 1, k + max(1, (m - k) // 2))
+    l_keep_static = restart_keep_size(cfg)
 
     # --- restart control ----------------------------------------------------
     # fori_loop needs static bounds and the first cycle (l=0) differs from
@@ -177,6 +244,162 @@ def lanczos_topk(
         def wbody(st):
             (V, T, key, *_), it, _ = st
             o, nc, _ = steady_cycle(V, T, key)
+            return o, it + 1, nc
+
+        (V, T, key, theta, S, V_old, res), restarts, n_conv = jax.lax.while_loop(
+            wcond, wbody, (out, jnp.asarray(1), n_conv)
+        )
+
+    # --- extract final top-k pairs from the last completed cycle ----------
+    topk = slice(m - k, m)
+    vals = theta[topk][::-1] * sign  # descending, undo "SA" negation
+    U = (S[:, topk].T @ V_old[:m]).astype(cfg.dtype)  # [k, n]
+    U = U[::-1].T  # [n, k] descending order
+    res_k = res[topk][::-1]
+    return LanczosResult(
+        eigenvalues=vals.astype(cfg.dtype),
+        eigenvectors=U,
+        residuals=res_k.astype(cfg.dtype),
+        restarts=restarts,
+        converged=n_conv >= k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block thick-restart Lanczos (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def _orthonormal_block_against(W: Array, basis: Array, key: Array) -> Array:
+    """[n, b] random directions orthogonal to the (zero-padded) basis rows
+    AND to each other — the block analogue of the breakdown escape hatch."""
+    n, b = W.shape
+    r = jax.random.normal(key, (n, b), jnp.float32)
+    r = r - basis.T @ (basis @ r)
+    q, _ = jnp.linalg.qr(r)
+    return q
+
+
+def _lanczos_topk_block(
+    matmat: Callable[[Array], Array],
+    n: int,
+    cfg: LanczosConfig,
+    *,
+    v0: Optional[Array] = None,
+    key: Optional[Array] = None,
+) -> LanczosResult:
+    """Block thick-restart Lanczos: basis grows b columns per operator pass.
+
+    Invariants mirror the single-vector path exactly — full-coefficient
+    bookkeeping (T rows are measured, not assumed), two-pass block
+    Gram-Schmidt, eigh of the projected matrix, thick restart keeping the
+    top Ritz pairs plus the residual block.  The per-step differences:
+
+    * ONE ``matmat`` streams the operator for all b new columns;
+    * reorthogonalization is two [m+b, n]·[n, b] GEMM pairs (MXU);
+    * the in-block factorization is a [n, b] QR; its R factor (composed with
+      the cleanup QR's R) is the band coupling block recorded in T;
+    * rank-deficient residual columns (invariant subspace hit) are replaced
+      by random directions orthogonal to everything, with ~zero coupling —
+      identical semantics to the single-vector random restart.
+    """
+    k, b = cfg.k, cfg.block_size
+    m = effective_basis_size(cfg)
+    assert 0 < k < m and m + b <= n, (
+        f"block Lanczos needs k < m and m + b <= n (k={k}, m={m}, b={b}, n={n}); "
+        f"shrink block_size or the basis m for this problem size"
+    )
+    assert m >= k + 2 * b, f"block mode needs m >= k + 2b (m={m}, k={k}, b={b})"
+    key = jax.random.PRNGKey(0) if key is None else key
+    f32 = jnp.float32
+
+    key, k0 = jax.random.split(key)
+    X0 = jax.random.normal(k0, (n, b), f32)
+    if v0 is not None:
+        X0 = X0.at[:, 0].set(v0.astype(f32))
+    Q0, _ = jnp.linalg.qr(X0)  # column 0 keeps v0's direction
+
+    sign = 1.0 if cfg.which == "LA" else -1.0  # "SA" negates the spectrum
+
+    l_keep = restart_keep_size(cfg)
+
+    def make_step(l):
+        def step(i, carry):
+            """One block step: expand basis rows j+b..j+2b-1, record T blocks."""
+            V, T, key = carry
+            j = l + i * b
+            Vj = jax.lax.dynamic_slice_in_dim(V, j, b, axis=0)  # [b, n]
+            W = matmat(Vj.T).astype(f32).T * sign  # [b, n] — ONE operator stream
+            C = V @ W.T  # [m+b, b] couplings (zero rows -> zero coeffs)
+            T = jax.lax.dynamic_update_slice(T, C, (0, j))
+            T = jax.lax.dynamic_update_slice(T, C.T, (j, 0))
+            W = W - C.T @ V
+            C2 = V @ W.T  # second Gram-Schmidt pass
+            W = W - C2.T @ V
+            # in-block orthonormalization: W.T = Q R, band block B = R2 @ R
+            Q, R = jnp.linalg.qr(W.T)  # [n, b], [b, b]
+            key, sub = jax.random.split(key)
+            ok = jnp.abs(jnp.diagonal(R)) > 1e-10
+            E = _orthonormal_block_against(W.T, V, sub)
+            Qf = jnp.where(ok[None, :], Q, E)  # escape deficient directions
+            Qf = Qf - V.T @ (V @ Qf)  # cleanup vs old basis (no-op if full rank)
+            Q2, R2 = jnp.linalg.qr(Qf)
+            B = R2 @ R  # deficient columns of R are ~0 -> ~zero coupling
+            V = jax.lax.dynamic_update_slice(V, Q2.T, (j + b, 0))
+            T = jax.lax.dynamic_update_slice(T, B, (j + b, j))
+            T = jax.lax.dynamic_update_slice(T, B.T, (j, j + b))
+            return V, T, key
+
+        return step
+
+    def run_cycle(V, T, l, key):
+        """Block steps l..m-b (stride b), then Ritz extraction + restart state."""
+        V, T, key = jax.lax.fori_loop(0, (m - l) // b, make_step(l), (V, T, key))
+        Bm = T[m : m + b, m - b : m]  # last band coupling block
+        theta, S = jnp.linalg.eigh(T[:m, :m])  # ascending
+        # residual of Ritz pair i: ‖B_m · S[m-b:m, i]‖  (top-k in last k cols)
+        res = jnp.linalg.norm(Bm @ S[m - b :, :], axis=0)
+        scale = jnp.maximum(jnp.max(jnp.abs(theta)), 1e-12)
+        conv = res[m - k :] <= cfg.tol * scale
+        n_conv = conv.sum()
+
+        # ---- thick restart: l_keep top Ritz pairs + the b residual columns
+        keep = slice(m - l_keep, m)
+        Y = (S[:, keep].T @ V[:m]).astype(f32)  # [l_keep, n] Ritz vectors
+        V_new = jnp.zeros_like(V)
+        V_new = V_new.at[:l_keep].set(Y)
+        V_new = V_new.at[l_keep : l_keep + b].set(V[m : m + b])
+        H = Bm @ S[m - b :, keep]  # [b, l_keep] restart couplings
+        T_new = jnp.zeros_like(T)
+        T_new = T_new.at[jnp.arange(l_keep), jnp.arange(l_keep)].set(theta[keep])
+        T_new = T_new.at[l_keep : l_keep + b, :l_keep].set(H)
+        T_new = T_new.at[:l_keep, l_keep : l_keep + b].set(H.T)
+        return (V_new, T_new, key, theta, S, V, res), n_conv
+
+    V0 = jnp.zeros((m + b, n), f32).at[:b].set(Q0.T)
+    T0 = jnp.zeros((m + b, m + b), f32)
+
+    out, n_conv = run_cycle(V0, T0, 0, key)
+
+    def steady_cycle(V, T, key):
+        return run_cycle(V, T, l_keep, key)
+
+    if cfg.fixed_restarts is not None:
+        def fbody(_, st):
+            (V, T, key, *_), _ = st
+            return steady_cycle(V, T, key)
+
+        (V, T, key, theta, S, V_old, res), n_conv = jax.lax.fori_loop(
+            0, cfg.fixed_restarts, fbody, (out, n_conv)
+        )
+        restarts = jnp.asarray(1 + cfg.fixed_restarts)
+    else:
+        def wcond(st):
+            _, it, nc = st
+            return jnp.logical_and(it < cfg.max_restarts, nc < k)
+
+        def wbody(st):
+            (V, T, key, *_), it, _ = st
+            o, nc = steady_cycle(V, T, key)
             return o, it + 1, nc
 
         (V, T, key, theta, S, V_old, res), restarts, n_conv = jax.lax.while_loop(

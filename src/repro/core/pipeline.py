@@ -17,7 +17,7 @@ import repro.core.laplacian as lap
 import repro.core.lanczos as lz
 import repro.core.kmeans as km
 from repro.sparse.formats import COO
-from repro.sparse.ops import spmv_coo
+from repro.sparse.ops import spmm_coo, spmv_coo
 
 Array = jax.Array
 
@@ -36,9 +36,10 @@ class SpectralResult(NamedTuple):
 class SpectralClusteringConfig:
     n_clusters: int
     n_eigvecs: Optional[int] = None  # default: n_clusters
-    lanczos_m: Optional[int] = None  # default: ARPACK-style 2k
+    lanczos_m: Optional[int] = None  # default: ARPACK-style 2k (scaled by block)
     lanczos_tol: float = 1e-5
     lanczos_max_restarts: int = 60
+    lanczos_block_size: int = 1  # Krylov block width b (>1: SpMM block mode)
     kmeans_max_iters: int = 100
     kmeans_update: str = "matmul"
     kmeans_assign: str = "auto"
@@ -47,30 +48,44 @@ class SpectralClusteringConfig:
     fixed_kmeans_iters: Optional[int] = None
 
 
+def default_basis_size(n: int, k: int, b: int = 1) -> int:
+    """ARPACK-style ncv ≥ 2k, widened with the Krylov block so every restart
+    cycle still runs several block steps (block mode loses polynomial degree
+    per basis column; extra columns buy it back — DESIGN.md §3)."""
+    return min(n, max(2 * k, k + 16, k + 8 * b))
+
+
 def spectral_cluster(
     w: COO,
     cfg: SpectralClusteringConfig,
     key: Array,
     *,
     matvec: Optional[Callable[[Array], Array]] = None,
+    matmat: Optional[Callable[[Array], Array]] = None,
     deg: Optional[Array] = None,
 ) -> SpectralResult:
     """Cluster the similarity graph ``w`` into ``cfg.n_clusters`` parts.
 
     ``matvec`` overrides the operator application (must implement
     x ↦ D^{-1/2} W D^{-1/2} x); used by the distributed launcher to plug in
-    the shard_map SpMV.  ``w`` must be row-sorted, symmetric, non-negative.
+    the shard_map SpMV.  With ``cfg.lanczos_block_size > 1`` the eigensolver
+    instead drives ``matmat`` ([n, b] ↦ [n, b]), defaulting to the COO SpMM.
+    ``w`` must be row-sorted, symmetric, non-negative.
     """
     n = w.shape[0]
     k = cfg.n_eigvecs or cfg.n_clusters
+    b = cfg.lanczos_block_size
     g = lap.normalized_graph(w)
-    if matvec is None:
+    if matvec is None and matmat is None:
         adj = g.adj_sym
 
         def matvec(x):  # noqa: F811 - intentional closure
             return spmv_coo(adj, x)
 
-    m = cfg.lanczos_m or min(n, max(2 * k, k + 16))
+        def matmat(X):  # noqa: F811 - intentional closure
+            return spmm_coo(adj, X)
+
+    m = cfg.lanczos_m or default_basis_size(n, k, b)
     lcfg = lz.LanczosConfig(
         k=k + (1 if cfg.drop_first else 0),
         m=max(m, k + (2 if cfg.drop_first else 1)),
@@ -78,12 +93,13 @@ def spectral_cluster(
         tol=cfg.lanczos_tol,
         which="LA",
         fixed_restarts=cfg.fixed_restarts,
+        block_size=b,
     )
     key, k_eig, k_km = jax.random.split(key, 3)
     # deterministic, informative start: D^{1/2}·1 is exactly the trivial
     # eigenvector of A_sym — Lanczos deflates it in one step.
     v0 = jnp.sqrt(jnp.maximum(g.deg.astype(jnp.float32), 0.0)) + 1e-3
-    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig)
+    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig, matmat=matmat)
 
     vecs = eig.eigenvectors
     vals = eig.eigenvalues

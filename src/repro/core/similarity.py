@@ -138,15 +138,17 @@ def knn_edges(points: np.ndarray, k: int, *, block: int = 2048) -> np.ndarray:
     pts = np.asarray(points, np.float32)
     n = pts.shape[0]
     nrm = (pts * pts).sum(1)
-    rows = []
+    out = []
     for i0 in range(0, n, block):
         pi = pts[i0 : i0 + block]
         d2 = nrm[i0 : i0 + block, None] + nrm[None, :] - 2.0 * pi @ pts.T
         idx = np.argpartition(d2, kth=min(k + 1, n - 1), axis=1)[:, : k + 1]
-        for li in range(pi.shape[0]):
-            gi = i0 + li
-            for j in idx[li]:
-                if j != gi:
-                    rows.append((gi, int(j)))
-    e = np.asarray(rows, np.int64)
-    return e
+        # [bsz, k+1] source ids by broadcasting; drop self-pairs with a mask
+        src = np.broadcast_to(
+            np.arange(i0, i0 + pi.shape[0], dtype=np.int64)[:, None], idx.shape
+        )
+        keep = idx != src
+        out.append(np.stack([src[keep], idx[keep].astype(np.int64)], axis=1))
+    return (
+        np.concatenate(out, axis=0) if out else np.zeros((0, 2), np.int64)
+    )

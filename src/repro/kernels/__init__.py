@@ -8,5 +8,7 @@ Each kernel package ships three files:
 
 Kernels:
   kmeans_assign — fused pairwise-distance + online argmin (Stage 3 hot op).
-  ell_spmv      — blocked-ELL SpMV (Stage 2 hot op).
+  ell_spmv      — blocked-ELL SpMV (Stage 2 hot op, single vector).
+  ell_spmm      — blocked-ELL multi-vector SpMM (Stage 2 hot op in block-
+                  Lanczos mode: one nnz stream serves b Krylov vectors).
 """

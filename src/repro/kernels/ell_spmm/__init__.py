@@ -1,0 +1,6 @@
+"""Multi-vector Blocked-ELL SpMM Pallas kernel (block-Lanczos hot op).
+
+Same three-file layout as every kernel package: ``kernel.py`` (pallas_call),
+``ops.py`` (jit'd public wrapper + tail handling), ``ref.py`` (jnp oracle).
+"""
+from repro.kernels.ell_spmm.ops import ell_spmm  # noqa: F401

@@ -1,0 +1,61 @@
+"""Blocked-ELL multi-vector SpMM Pallas kernel (TPU target) — the block-
+Lanczos hot op.
+
+``ell_spmv`` streams the whole nnz structure from HBM for ONE output vector;
+a b-vector block Krylov step would repeat that stream b times.  This kernel
+applies the operator to all ``b`` right-hand sides in a single pass over the
+cols/vals tiles (DESIGN.md §2): the arithmetic intensity per nnz byte grows
+b×, which is exactly where Stage 2 stops being memory-bound.
+
+Layout per grid step (1-D grid over row blocks):
+
+* ``cols``/``vals`` tiles [block_rows, width] stream HBM→VMEM with perfect
+  stride — identical traffic to the SpMV kernel, amortized over b outputs;
+* ``x`` is the [n, b] multi-vector, staged whole into VMEM (same residency
+  domain as the SpMV kernel divided by b: n·b ≤ ~3M fp32);
+* the irregular access is one VPU gather ``x[cols]`` producing a
+  [block_rows, width, b] tile; the width axis is contracted in registers for
+  all b columns at once, writing the [block_rows, b] output tile.
+
+Heavy-tail rows spill to a COO tail handled by the wrapper (HYB layout),
+same as the SpMV path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cols_ref, vals_ref, y_ref):
+    cols = cols_ref[...]  # [br, w] int32
+    vals = vals_ref[...]  # [br, w] f32
+    x = x_ref[...]  # [n, b] f32 (VMEM resident)
+    gathered = jnp.take(x, cols, axis=0, fill_value=0.0)  # [br, w, b] VPU gather
+    y_ref[...] = (vals.astype(jnp.float32)[..., None] * gathered).sum(axis=1)
+
+
+def ell_spmm_pallas(
+    x: jax.Array,  # [n, b] f32
+    cols: jax.Array,  # [n_rows_padded, width] int32
+    vals: jax.Array,  # [n_rows_padded, width] f32
+    *,
+    block_rows: int = 512,
+    interpret: bool = False,
+):
+    n_rows, width = cols.shape
+    assert n_rows % block_rows == 0, (n_rows, block_rows)
+    n, b = x.shape
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, b), lambda i: (0, 0)),  # x: whole multi-vector resident
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, b), jnp.float32),
+        interpret=interpret,
+    )(x, cols, vals)

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper: BlockELL(+tail) multi-vector SpMM with backend dispatch.
+
+``ell_spmm(m: BlockELL, x)`` with ``x: [n, b]`` — the drop-in matmat for the
+block-Lanczos eigensolver.  The Pallas kernel covers the ELL body; the COO
+overflow tail (heavy-degree rows beyond the ELL width) goes through the
+segment-sum SpMM and is added in.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmm.kernel import ell_spmm_pallas
+from repro.kernels.ell_spmm.ref import ell_spmm_ref
+from repro.sparse.formats import BlockELL
+from repro.sparse.ops import spmm_coo
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "block_rows"))
+def ell_spmm(
+    m: BlockELL,
+    x: jax.Array,  # [n, b]
+    *,
+    impl: str = "auto",  # "auto" | "pallas" | "ref"
+    interpret: bool | None = None,
+    block_rows: int = 512,
+):
+    assert x.ndim == 2, f"ell_spmm wants [n, b] multi-vectors, got {x.shape}"
+    nb, br, w = m.cols.shape
+    n_rows_padded = nb * br
+    cols2d = m.cols.reshape(n_rows_padded, w)
+    vals2d = m.vals.reshape(n_rows_padded, w)
+
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu and not interpret):
+        body = ell_spmm_ref(x, cols2d, vals2d)
+    else:
+        if interpret is None:
+            interpret = not on_tpu
+        blk = block_rows
+        while n_rows_padded % blk:
+            blk //= 2
+        body = ell_spmm_pallas(
+            x.astype(jnp.float32), cols2d, vals2d, block_rows=max(blk, 1), interpret=interpret
+        )
+    y = body[: m.shape[0]]
+    y = y + spmm_coo(m.tail, x).astype(jnp.float32)
+    return y.astype(x.dtype)

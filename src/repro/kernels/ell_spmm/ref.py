@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the BlockELL multi-vector SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Y[r, :] = Σ_w vals[r, w] · x[cols[r, w], :]  (padding slots carry val = 0)."""
+    gathered = vals.astype(jnp.float32)[..., None] * x.astype(jnp.float32)[cols]
+    return gathered.sum(axis=1)

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import SHARD_MAP_NO_CHECK as _NO_CHECK, shard_map as _shard_map
 from repro.launch.sharding import constrain
 from repro.models.common import dense_init
 
@@ -177,11 +178,11 @@ def moe_ffn_shard_map(p, x: Array, cfg: MoEConfig, mesh) -> Tuple[Array, Dict[st
     from jax.sharding import PartitionSpec as P
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(), P("model"), P("model"), P("model"), P(data_axes)),
         out_specs=(P(data_axes), P()),
-        check_vma=False,
+        **_NO_CHECK,
     )
     def f(router, wg, wu, wd, x_loc):
         T_loc, d = x_loc.shape

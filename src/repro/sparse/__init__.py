@@ -15,6 +15,8 @@ from repro.sparse.formats import COO, CSR, BlockELL, coo_from_edges, coo_to_csr,
 from repro.sparse.ops import (  # noqa: F401
     spmv_coo,
     spmm_coo,
+    spmv_blockell,
+    spmm_blockell,
     degrees,
     normalize_sym,
     normalize_rw,

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.sparse.formats import COO
 
 Array = jax.Array
@@ -137,7 +138,7 @@ def make_sharded_spmv(mesh: Mesh, sm: ShardedCOO, *, axis: str | tuple = "data",
     xspec = P(axes)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(espec, espec, espec, xspec),
         out_specs=xspec,
@@ -154,6 +155,63 @@ def make_sharded_spmv(mesh: Mesh, sm: ShardedCOO, *, axis: str | tuple = "data",
         return y.astype(x_blk.dtype)
 
     return spmv
+
+
+# ---------------------------------------------------------------------------
+# Multi-vector paths (block Lanczos) — one collective per b-column block
+# ---------------------------------------------------------------------------
+
+def spmm_gspmd(sm: ShardedCOO, x: Array) -> Array:
+    """Y = W @ X for dense X [n, b] over globally-indexed rows (GSPMD
+    baseline).  Per-column 1-D segment sums, same rationale as
+    :func:`repro.sparse.ops.spmm_coo`."""
+    shard = jnp.arange(sm.num_shards, dtype=jnp.int32).repeat(sm.edges_per_shard)
+    grow = sm.row_local + shard * sm.rows_per_shard
+    val = sm.val.astype(jnp.float32)
+    cols = [
+        jax.ops.segment_sum(val * x[:, j][sm.col].astype(jnp.float32), grow,
+                            num_segments=sm.shape[0])
+        for j in range(x.shape[1])
+    ]
+    return jnp.stack(cols, axis=1).astype(x.dtype)
+
+
+def make_sharded_spmm(mesh: Mesh, sm: ShardedCOO, *, axis: str | tuple = "data",
+                      gather_dtype=None):
+    """Returns ``spmm(row_local, col, val, x) -> y`` for X/Y of shape [n, b],
+    rows sharded over ``axis`` — the block-Lanczos matmat engine.
+
+    The single-vector SpMV pays one all-gather of x per Lanczos step; here
+    ONE all-gather moves the whole [n, b] block, so the per-vector collective
+    cost drops b× alongside the b× nnz-stream amortization — the two wins
+    the block eigensolver was built for (DESIGN.md §3-4).
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    espec = P(axes)
+    xspec = P(axes, None)
+
+    @partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(espec, espec, espec, xspec),
+        out_specs=xspec,
+    )
+    def spmm(row_local, col, val, x_blk):
+        xg = x_blk
+        if gather_dtype is not None:
+            xg = xg.astype(gather_dtype)
+        x_full = xg
+        for ax in axes:  # one gather of the whole block per sharded axis
+            x_full = jax.lax.all_gather(x_full, ax, axis=0, tiled=True)
+        valf = val.astype(jnp.float32)
+        cols = [
+            jax.ops.segment_sum(valf * x_full[:, j][col].astype(jnp.float32),
+                                row_local, num_segments=sm.rows_per_shard)
+            for j in range(x_blk.shape[1])
+        ]
+        return jnp.stack(cols, axis=1).astype(x_blk.dtype)
+
+    return spmm
 
 
 def shard_vector(mesh: Mesh, x: Array, axis="data") -> Array:

@@ -1,0 +1,106 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The container this repo targets does not ship hypothesis, and we cannot add
+dependencies.  This stub implements the tiny subset the test-suite uses —
+``@given`` with keyword strategies, ``@settings(max_examples=…)``, and the
+``integers`` / ``floats`` strategies — as a deterministic sampled sweep:
+each ``@given`` test runs ``max_examples`` times with draws from a fixed
+PRNG seed, so failures reproduce exactly.
+
+``conftest.py`` installs this module into ``sys.modules['hypothesis']`` only
+when the real package is missing; with hypothesis installed the stub is
+inert.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' API
+    """Decorator recording ``max_examples``; ``deadline`` etc. are ignored."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategies):
+    def decorate(fn):
+        # NB: no functools.wraps — pytest must see a zero-arg signature, not
+        # the strategy parameters (it would look for fixtures named like them)
+        def wrapper():
+            # @settings may sit above @given (attr on wrapper) or below it
+            # (attr on fn) — real hypothesis accepts both orders
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strategies.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+def _make_module() -> types.ModuleType:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.sampled_from = _sampled_from
+    st.booleans = _booleans
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__stub__ = True
+    return mod
+
+
+def install() -> None:
+    """Register the stub as ``hypothesis`` iff the real package is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+        return
+    except ImportError:
+        pass
+    mod = _make_module()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies

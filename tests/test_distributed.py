@@ -109,7 +109,8 @@ def test_compressed_psum_mean():
         mesh = jax.make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 128), jnp.float32)
         r = jnp.zeros((8, 128), jnp.float32)
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+        from repro.compat import shard_map
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
                  out_specs=(P("data"), P("data")))
         def f(gl, rl):
             m, nr = compressed_psum_mean(gl[0], rl[0], "data")

@@ -38,6 +38,24 @@ def test_sbm_recovery(r, n_per):
     assert (ev[:r] < 0.5).all()
 
 
+def test_block_lanczos_pipeline_matches_single():
+    """lanczos_block_size=4 end-to-end: same eigenvalues (1e-4) and same
+    cluster recovery as the single-vector pipeline."""
+    coo, truth = sbm_graph(100, 4, 0.3, 0.01, seed=5)
+    out1 = spectral_cluster(
+        coo, SpectralClusteringConfig(n_clusters=4), jax.random.PRNGKey(0)
+    )
+    out4 = spectral_cluster(
+        coo, SpectralClusteringConfig(n_clusters=4, lanczos_block_size=4),
+        jax.random.PRNGKey(0),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out4.eigenvalues), np.asarray(out1.eigenvalues), atol=1e-4
+    )
+    assert _nmi(out4.labels, truth) > 0.95
+    assert _nmi(out4.labels, out1.labels) > 0.99
+
+
 def test_weighted_graph_and_kmeans_assign_paths_agree():
     coo, truth = sbm_graph(80, 5, 0.4, 0.01, seed=11, weighted=True)
     base = SpectralClusteringConfig(n_clusters=5, kmeans_assign="ref")

@@ -6,8 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.sparse.formats import coo_from_edges, coo_to_csr, csr_to_blockell
 from repro.sparse.ops import (
-    degrees, normalize_rw, normalize_sym, spmm_coo, spmv_coo, spmv_csr,
-    spmv_blockell, symmetrize_coo,
+    degrees, normalize_rw, normalize_sym, spmm_blockell, spmm_coo, spmv_coo,
+    spmv_csr, spmv_blockell, symmetrize_coo,
 )
 
 
@@ -44,6 +44,36 @@ def test_spmm_matches_dense():
     W, coo = _rand(100, 0.05, seed=7)
     X = np.random.default_rng(2).normal(size=(100, 13)).astype(np.float32)
     np.testing.assert_allclose(np.asarray(spmm_coo(coo, jnp.asarray(X))), W @ X, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n,b,density,wq",
+    [
+        (64, 4, 0.1, 1.0),  # no tail
+        (300, 2, 0.05, 0.5),  # heavy-tail spill rows
+        (513, 8, 0.03, 0.5),  # rows not a multiple of block_rows, heavy tail
+        (127, 3, 0.08, 0.7),
+    ],
+)
+def test_spmm_blockell_matches_dense(n, b, density, wq):
+    W, coo = _rand(n, density, seed=n + b)
+    ell = csr_to_blockell(coo_to_csr(coo), block_rows=8, width_quantile=wq)
+    X = jnp.asarray(np.random.default_rng(1).normal(size=(n, b)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(spmm_blockell(ell, X)), W @ np.asarray(X), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_spmm_blockell_columns_match_spmv():
+    """The multi-vector path must be column-wise identical to the SpMV path."""
+    W, coo = _rand(150, 0.05, seed=13)
+    ell = csr_to_blockell(coo_to_csr(coo), block_rows=8, width_quantile=0.6)
+    X = jnp.asarray(np.random.default_rng(4).normal(size=(150, 6)), jnp.float32)
+    Y = np.asarray(spmm_blockell(ell, X))
+    for j in range(6):
+        np.testing.assert_allclose(
+            Y[:, j], np.asarray(spmv_blockell(ell, X[:, j])), rtol=1e-5, atol=1e-5
+        )
 
 
 def test_normalizations():
