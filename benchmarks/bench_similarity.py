@@ -4,19 +4,34 @@ The paper: 0.033 s (CUDA) vs 221 s (serial Matlab loop) vs 5.75 s
 (vectorized Matlab) on 142k points / 4M edges.  We reproduce the *structure*
 of that comparison on CPU: the vectorized jit pipeline vs a per-edge Python
 loop (the Matlab-serial analogue), on a scaled DTI-like workload.
+
+Additionally sweeps the device-resident Stage 1 (`build_knn_graph`: fused
+kNN search → similarity → symmetric sorted COO, all under one jit) against
+the host path (`knn_edges` + `build_similarity_graph`) and writes
+``BENCH_similarity.json`` — edges/s and the device-vs-host speedup — so the
+Stage-1 perf trajectory is tracked across PRs.  ``--smoke`` shrinks the
+sweep for CI.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import time
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core.similarity import edge_similarities
+from repro.core.similarity import (
+    build_knn_graph,
+    build_similarity_graph,
+    edge_similarities,
+    knn_edges,
+)
 
 
 def _naive_loop(x: np.ndarray, e: np.ndarray, cap: int = 2000) -> float:
-    import time
-
     xc = x - x.mean(1, keepdims=True)
     nrm = np.linalg.norm(xc, axis=1)
     t0 = time.perf_counter()
@@ -26,13 +41,11 @@ def _naive_loop(x: np.ndarray, e: np.ndarray, cap: int = 2000) -> float:
     return dt / cap * len(e) * 1e6  # extrapolated to full edge list
 
 
-def main() -> None:
+def edge_similarity_bench() -> None:
     rng = np.random.default_rng(0)
     n, d, nnz = 20000, 90, 500000  # DTI-shaped, CPU-scaled
     x = rng.normal(size=(n, d)).astype(np.float32)
     e = rng.integers(0, n, size=(nnz, 2)).astype(np.int32)
-
-    import jax
 
     fast = jax.jit(lambda x, e: edge_similarities(x, e, measure="cross_correlation"))
     us = time_fn(fast, jnp.asarray(x), jnp.asarray(e))
@@ -41,6 +54,74 @@ def main() -> None:
 
     us_naive = _naive_loop(x, e)
     emit("similarity/naive_python_loop(extrap)", us_naive, f"speedup={us_naive/us:.0f}x")
+
+
+def knn_graph_sweep(out_path: str = "BENCH_similarity.json", smoke: bool = False) -> dict:
+    """Device Stage 1 (`build_knn_graph`) vs the host path on point clouds.
+
+    Both sides produce the same symmetric kNN similarity graph (exp_decay
+    weights; dense forms agree up to the documented ×2 symmetrization
+    scale).  The host time covers the full host path — numpy neighbor
+    search, edge-wise similarity, host COO assembly/sort — exactly what the
+    device path replaces.  Both sides are measured steady-state: one warmup
+    run each (the host path's embedded edge_similarities jit also compiles
+    on its first call), then best-of-2 host / median-of-3 device.
+    """
+    configs = [(2000, 16, 10)] if smoke else [(5000, 16, 10), (20000, 16, 10)]
+    entries = []
+    for n, d, k in configs:
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+
+        def host_path():
+            w = build_similarity_graph(x, knn_edges(x, k), measure="exp_decay", sigma=1.0)
+            jax.block_until_ready(w.val)
+
+        t_host = np.inf
+        host_path()  # warmup (compiles edge_similarities for this shape)
+        for _ in range(2):
+            t0 = time.perf_counter()
+            host_path()
+            t_host = min(t_host, time.perf_counter() - t0)
+
+        xj = jnp.asarray(x)
+        fn = jax.jit(lambda xx: build_knn_graph(xx, k, measure="exp_decay", sigma=1.0))
+        us_dev = time_fn(fn, xj, warmup=1, iters=3)
+        t_dev = us_dev * 1e-6
+
+        nnz = 2 * n * k  # static duplicate-coordinate layout
+        edges_per_s = nnz / t_dev
+        speedup = t_host / t_dev
+        emit(f"similarity/build_knn_graph_n{n}_k{k}", us_dev,
+             f"edges/s={edges_per_s:.3g};host_speedup={speedup:.1f}x")
+        entries.append({
+            "n": n, "d": d, "k": k,
+            "nnz": nnz,
+            "us_per_call_device": us_dev,
+            "us_per_call_host": t_host * 1e6,
+            "edges_per_s": edges_per_s,
+            "speedup_vs_host": speedup,
+        })
+    payload = {
+        "benchmark": "similarity_build_knn_graph",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small kNN sweep only, skip the slow edge bench")
+    args = ap.parse_args()
+    if not args.smoke:
+        edge_similarity_bench()
+    knn_graph_sweep(smoke=args.smoke)
 
 
 if __name__ == "__main__":

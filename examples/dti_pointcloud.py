@@ -2,12 +2,18 @@
 
     PYTHONPATH=src python examples/dti_pointcloud.py            # scaled-down
     PYTHONPATH=src python examples/dti_pointcloud.py --full     # 142k voxels
+    PYTHONPATH=src python examples/dti_pointcloud.py --device-stage1
 
 Pipeline (paper Fig. 2): 3-D voxel lattice with 90-dim connectivity
 profiles → ε-distance edge list → cross-correlation similarity graph
 (Alg. 1) → normalized Laplacian eigenvectors via restarted Lanczos
 (Alg. 2-3) → k-means++ clustering (Alg. 4-5).  Reports per-stage timings —
 the same decomposition as the paper's Table III.
+
+``--device-stage1`` swaps the host ε-edge construction for the device-
+resident fused path: spatial kNN via the ``knn_topk`` kernel + profile
+cross-correlation weights, points→labels under a single jit
+(``spectral_cluster_from_points``).
 """
 import argparse
 import time
@@ -15,7 +21,11 @@ import time
 import numpy as np
 import jax
 
-from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from repro.core.pipeline import (
+    SpectralClusteringConfig,
+    spectral_cluster,
+    spectral_cluster_from_points,
+)
 from repro.core.similarity import build_similarity_graph
 from repro.data.pointcloud import dti_like_pointcloud
 
@@ -25,29 +35,48 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale: 142k voxels, k=500")
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--clusters", type=int, default=12)
+    ap.add_argument("--device-stage1", action="store_true",
+                    help="device-resident Stage 1 (kNN kernel), points→labels in one jit")
+    ap.add_argument("--knn", type=int, default=16, help="neighbors per voxel (device Stage 1)")
     args = ap.parse_args()
     n = 142541 if args.full else args.n
     k = 500 if args.full else args.clusters
 
     t0 = time.perf_counter()
+    # the device path builds its own neighbor graph on device — skip the
+    # host O(n²) edge sweep entirely, that's the point of the flag
     pos, profiles, edges, region = dti_like_pointcloud(
-        n, d_profile=90, n_regions=max(k // 2, 4), eps=1.8, seed=0
+        n, d_profile=90, n_regions=max(k // 2, 4), eps=1.8, seed=0,
+        neighbors="none" if args.device_stage1 else "eps",
     )
     print(f"[data] {len(pos)} voxels, {len(edges)} ε-pairs "
           f"({time.perf_counter()-t0:.2f}s)")
 
-    t0 = time.perf_counter()
-    w = build_similarity_graph(profiles, edges, measure="cross_correlation")
-    t_sim = time.perf_counter() - t0
-    print(f"[stage 1] similarity graph: nnz={w.nnz} ({t_sim:.3f}s)")
-
     cfg = SpectralClusteringConfig(n_clusters=k, lanczos_tol=1e-4)
-    t0 = time.perf_counter()
-    out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(w, jax.random.PRNGKey(0))
-    jax.block_until_ready(out.labels)
-    t_solve = time.perf_counter() - t0
-    print(f"[stages 2+3] eigensolver+kmeans: {t_solve:.3f}s "
-          f"(restarts={int(out.lanczos_restarts)}, km_iters={int(out.kmeans_iterations)})")
+    if args.device_stage1:
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        out = jax.jit(lambda x, p, key: spectral_cluster_from_points(
+            x, cfg, key, knn_k=args.knn, points=p, measure="cross_correlation"))(
+            jnp.asarray(profiles), jnp.asarray(pos), jax.random.PRNGKey(0))
+        jax.block_until_ready(out.labels)
+        t_solve = time.perf_counter() - t0
+        print(f"[stages 1-3, device] points→labels: {t_solve:.3f}s "
+              f"(nnz={2 * n * args.knn}, restarts={int(out.lanczos_restarts)}, "
+              f"km_iters={int(out.kmeans_iterations)})")
+    else:
+        t0 = time.perf_counter()
+        w = build_similarity_graph(profiles, edges, measure="cross_correlation")
+        t_sim = time.perf_counter() - t0
+        print(f"[stage 1] similarity graph: nnz={w.nnz} ({t_sim:.3f}s)")
+
+        t0 = time.perf_counter()
+        out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(w, jax.random.PRNGKey(0))
+        jax.block_until_ready(out.labels)
+        t_solve = time.perf_counter() - t0
+        print(f"[stages 2+3] eigensolver+kmeans: {t_solve:.3f}s "
+              f"(restarts={int(out.lanczos_restarts)}, km_iters={int(out.kmeans_iterations)})")
 
     labels = np.asarray(out.labels)
     sizes = np.bincount(labels, minlength=k)

@@ -10,6 +10,10 @@ NOTE: ``repro.core.kmeans`` (module) contains ``kmeans`` (function) — we do
 NOT re-export the function here, to avoid shadowing the submodule.
 """
 
-from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    SpectralClusteringConfig,
+    spectral_cluster,
+    spectral_cluster_from_points,
+)
 from repro.core.lanczos import lanczos_topk  # noqa: F401
 from repro.core.kmeans import kmeanspp_init  # noqa: F401

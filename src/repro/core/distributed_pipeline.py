@@ -19,19 +19,33 @@ nnz-stream amortization (DESIGN.md §3-4).
 
 Everything else (Lanczos, k-means) is mesh-agnostic jnp whose collectives
 GSPMD derives from the sharded operands.
+
+Stage 1 has a sharded variant too: :func:`spectral_cluster_from_points_sharded`
+row-partitions the O(n²d) kNN search over the mesh (``make_knn_rowblock``)
+before handing the assembled graph to the plain jit pipeline.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 import repro.core.kmeans as km
 import repro.core.lanczos as lz
-from repro.core.pipeline import SpectralClusteringConfig, SpectralResult, default_basis_size
+from repro.compat import shard_map as _shard_map
+from repro.core.pipeline import (
+    SpectralClusteringConfig,
+    SpectralResult,
+    default_basis_size,
+    spectral_cluster,
+)
 import repro.core.laplacian as lap
+from repro.core.similarity import graph_from_knn
+from repro.kernels.knn_topk.ref import knn_topk_ref
 from repro.sparse.distributed import (
     ShardedCOO,
     make_sharded_spmm,
@@ -54,6 +68,73 @@ def normalize_sharded(sm: ShardedCOO, deg: Array) -> ShardedCOO:
     grow = _global_rows(sm)
     val = sm.val * isd[grow] * isd[sm.col]
     return dataclasses.replace(sm, val=val)
+
+
+def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024):
+    """Row-block-sharded Stage-1 neighbor search (the kNN analogue of
+    :func:`repro.sparse.distributed.make_sharded_spmv`'s layout).
+
+    Each shard owns a contiguous row block of the [n, d] point matrix,
+    all-gathers the full point set once (the same one-collective-per-pass
+    discipline as the SpMV; points are n·d floats — for Stage 1 this is the
+    whole input, the analogue of the paper keeping the data matrix GPU-
+    resident), and computes its rows' kNN against it.  Self-pairs are
+    excluded via the shard's global row offset (``axis_index · rows_local``).
+
+    Returns ``knn(x) -> (dist² [n, k], idx [n, k])`` with rows sharded over
+    ``axis``; outputs feed :func:`repro.core.similarity.graph_from_knn`.
+    """
+
+    @partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None),),
+        out_specs=(P(axis, None), P(axis, None)),
+    )
+    def knn(x_blk):
+        x_full = jax.lax.all_gather(x_blk, axis, axis=0, tiled=True)
+        offset = jax.lax.axis_index(axis) * x_blk.shape[0]
+        return knn_topk_ref(x_full, k, queries=x_blk, query_offset=offset,
+                            block_q=block_q)
+
+    return knn
+
+
+def spectral_cluster_from_points_sharded(
+    x: Array,
+    cfg: SpectralClusteringConfig,
+    key: Array,
+    *,
+    mesh,
+    knn_k: int = 10,
+    axis: str = "data",
+    measure: str = "exp_decay",
+    sigma: float = 1.0,
+    knn_eps: Array | float | None = None,
+) -> SpectralResult:
+    """Points in, labels out with a row-block-sharded Stage 1.
+
+    The O(n²d) neighbor search — the dominant Stage-1 cost — runs shard_map
+    row-parallel over ``axis``; graph assembly and Stages 2-3 are the plain
+    jit pipeline, whose collectives GSPMD derives from the sharded operands.
+    ``x.shape[0]`` must divide evenly by the mesh axis size.
+    """
+    from jax.sharding import NamedSharding
+
+    n = x.shape[0]
+    n_shards = mesh.shape[axis]
+    assert n % n_shards == 0, (n, n_shards)
+    dist2, idx = make_knn_rowblock(mesh, knn_k, axis=axis)(x)
+    # Re-replicate the small [n, k] search results before graph assembly: the
+    # O(n²d) work was the sharded part; assembly is O(nk) and the argsort
+    # gather miscompiles under GSPMD on operands left partially replicated
+    # over the unmentioned mesh axes (observed on jax 0.4.x CPU: gathered
+    # values get psum-doubled across the model axis).
+    rep = NamedSharding(mesh, P())
+    dist2 = jax.lax.with_sharding_constraint(dist2, rep)
+    idx = jax.lax.with_sharding_constraint(idx, rep)
+    w = graph_from_knn(x, dist2, idx, measure=measure, sigma=sigma, eps=knn_eps)
+    return spectral_cluster(w, cfg, key)
 
 
 def spectral_cluster_sharded(

@@ -22,6 +22,7 @@ a single [k,d] all-reduce per iteration).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -68,15 +69,30 @@ def assign_ref(x: Array, c: Array, x_norm: Optional[Array] = None):
     return labels, dmin
 
 
+_fallback_warned = False
+
+
 def _assign(x, c, x_norm, cfg: KMeansConfig):
+    # Only unavailability (missing/unported kernel) may fall back under
+    # "auto" — a bare except here would silently mask real kernel bugs as a
+    # slow reference path.  Anything else propagates.
+    global _fallback_warned
     if cfg.assign in ("fused", "auto"):
         try:
             from repro.kernels.kmeans_assign.ops import kmeans_assign as fused
 
             return fused(x, c, x_norm=x_norm, block_q=cfg.block_q, block_k=cfg.block_k)
-        except Exception:
+        except (ImportError, NotImplementedError) as e:
             if cfg.assign == "fused":
                 raise
+            if not _fallback_warned:
+                _fallback_warned = True
+                warnings.warn(
+                    f"fused kmeans_assign kernel unavailable ({e!r}); "
+                    "falling back to the reference assignment path",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
     return assign_ref(x, c, x_norm)
 
 

@@ -7,20 +7,30 @@ CUDA thread per edge; on TPU the same computation is a batched gather +
 row-wise contraction that the VPU vectorizes — we additionally chunk it with
 ``jax.lax.map`` so the nnz×d gather working set stays HBM-friendly.
 
-Also provides host-side neighborhood builders (ε-ball / kNN via blocked
-brute force) used by the data pipeline and the NequIP/Equiformer radius
-graphs — the paper assumes E is given; a real framework has to build it.
+The paper assumes E is given; a real framework has to build it.  Two
+builders coexist:
+
+* :func:`build_knn_graph` — device-resident (jit-safe) construction: the
+  fused ``kernels/knn_topk`` neighbor search → edge similarity →
+  symmetrization → row-sorted COO, all on device with static shapes
+  (nnz = 2·n·k duplicate-coordinate layout).  This is the Stage-1 path the
+  paper's Table III speedup is about (DESIGN.md §9).
+* :func:`eps_neighbors` / :func:`knn_edges` — host-side numpy fallbacks
+  (blocked brute force) used by the data pipeline and the NequIP/Equiformer
+  radius graphs, and as the oracle the device path is tested against.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal, Tuple
+from typing import Literal, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.knn_topk.ops import knn_topk
 from repro.sparse.formats import COO, coo_from_edges
+from repro.sparse.ops import sort_coo_rows, symmetrize_coo
 
 Array = jax.Array
 
@@ -113,6 +123,87 @@ def build_similarity_graph(
 
 
 # ---------------------------------------------------------------------------
+# Device-resident Stage 1 (jit-safe; DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def graph_from_knn(
+    x: Array,
+    dist2: Array,  # [n, k] squared neighbor distances (+inf on invalid slots)
+    idx: Array,  # [n, k] neighbor ids (-1 on invalid slots)
+    *,
+    measure: Measure = "exp_decay",
+    sigma: float = 1.0,
+    eps: Array | float | None = None,
+    clip_negative: bool = True,
+    sim_chunk: int = 65536,
+    dist2_in_x_space: bool = True,
+) -> COO:
+    """kNN search results → symmetric row-sorted COO, fully on device.
+
+    Static shapes under jit: entries cannot be dropped, so invalid slots
+    (masked neighbors, clipped similarities) become zero-valued self edges —
+    harmless to every consumer (degrees, normalization, SpMV).  The
+    symmetrization is the duplicate-coordinate ``(W + Wᵀ)/2``; mutual-kNN
+    pairs appear twice with half weight each, one-sided pairs once.
+
+    ``dist2_in_x_space=False`` declares that ``dist2`` was measured in a
+    *different* space than ``x`` (neighbor search on positions, weights from
+    features): the exp_decay shortcut of reusing the search distances would
+    then weight edges by the wrong metric, so distances are recomputed from
+    ``x`` via the chunked edge gather instead.
+    """
+    n, k = idx.shape
+    row = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    valid = (idx >= 0).reshape(-1)
+    if eps is not None:
+        valid &= (dist2 <= jnp.asarray(eps, jnp.float32) ** 2).reshape(-1)
+    col = jnp.where(valid, idx.reshape(-1).astype(jnp.int32), row)
+    if measure == "exp_decay" and dist2_in_x_space:
+        # the neighbor search already produced the distances — no regather
+        vals = jnp.exp(-dist2.reshape(-1) / (2.0 * sigma**2))
+    else:
+        edges = jnp.stack([row, col], axis=1)
+        vals = edge_similarities(x, edges, measure=measure, sigma=sigma, chunk=sim_chunk)
+    if clip_negative:
+        vals = jnp.maximum(vals, 0.0)
+    vals = jnp.where(valid, vals, 0.0).astype(jnp.float32)
+    w = symmetrize_coo(COO(row, col, vals, (n, n)))
+    return sort_coo_rows(w)
+
+
+def build_knn_graph(
+    x: Array,
+    k: int,
+    *,
+    points: Optional[Array] = None,
+    measure: Measure = "exp_decay",
+    sigma: float = 1.0,
+    eps: Array | float | None = None,
+    clip_negative: bool = True,
+    impl: str = "auto",
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> COO:
+    """End-to-end device Stage 1: fused kNN search → similarity → symmetric
+    row-sorted COO.  jit-safe (static nnz = 2·n·k); no host neighbor loop.
+
+    ``points`` optionally separates the neighbor-search space from the
+    similarity features (the paper's DTI workflow: spatial ε/kNN neighbors,
+    cross-correlation of connectivity profiles as weights).  ``eps`` turns
+    the kNN search into a degree-capped ε-ball (neighbors beyond the radius
+    are dropped).  With ``measure="exp_decay"`` and ``points=None`` the
+    kernel's distances are reused directly — no second gather pass.
+    """
+    p = x if points is None else points
+    dist2, idx = knn_topk(p, k, impl=impl, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return graph_from_knn(x, dist2, idx, measure=measure, sigma=sigma, eps=eps,
+                          clip_negative=clip_negative,
+                          dist2_in_x_space=points is None)
+
+
+# ---------------------------------------------------------------------------
 # Neighborhood builders (host-side; the paper assumes E is given)
 # ---------------------------------------------------------------------------
 
@@ -134,18 +225,28 @@ def eps_neighbors(points: np.ndarray, eps: float, *, block: int = 2048) -> np.nd
 
 
 def knn_edges(points: np.ndarray, k: int, *, block: int = 2048) -> np.ndarray:
-    """Symmetric kNN pairs (i, j) — j among the k nearest of i (i ≠ j)."""
+    """Directed kNN pairs (i, j) — j among the k nearest of i (i ≠ j).
+
+    Emits exactly ``min(k, n-1)`` edges per source row: the self distance is
+    pinned to −inf so the self index is *always* among the k+1 candidates and
+    dropping it leaves k survivors.  (Selecting the raw top-(k+1) and masking
+    ``idx != src`` is not enough — duplicate points can push the self index
+    out of the candidate set and leave k+1 neighbors.)
+    """
     pts = np.asarray(points, np.float32)
     n = pts.shape[0]
     nrm = (pts * pts).sum(1)
+    kk = min(k, n - 1)
     out = []
     for i0 in range(0, n, block):
         pi = pts[i0 : i0 + block]
-        d2 = nrm[i0 : i0 + block, None] + nrm[None, :] - 2.0 * pi @ pts.T
-        idx = np.argpartition(d2, kth=min(k + 1, n - 1), axis=1)[:, : k + 1]
-        # [bsz, k+1] source ids by broadcasting; drop self-pairs with a mask
+        bsz = pi.shape[0]
+        d2 = nrm[i0 : i0 + bsz, None] + nrm[None, :] - 2.0 * pi @ pts.T
+        d2[np.arange(bsz), np.arange(i0, i0 + bsz)] = -np.inf
+        idx = np.argpartition(d2, kth=kk, axis=1)[:, : kk + 1]
+        # [bsz, kk+1] candidates including the pinned self; drop it
         src = np.broadcast_to(
-            np.arange(i0, i0 + pi.shape[0], dtype=np.int64)[:, None], idx.shape
+            np.arange(i0, i0 + bsz, dtype=np.int64)[:, None], idx.shape
         )
         keep = idx != src
         out.append(np.stack([src[keep], idx[keep].astype(np.int64)], axis=1))

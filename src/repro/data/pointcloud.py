@@ -6,7 +6,7 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.similarity import eps_neighbors
+from repro.core.similarity import eps_neighbors, knn_edges
 
 
 def dti_like_pointcloud(
@@ -15,6 +15,8 @@ def dti_like_pointcloud(
     n_regions: int = 8,
     *,
     eps: float = 1.5,
+    neighbors: str = "eps",  # "eps" | "knn" | "none"
+    knn_k: int = 16,
     seed: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Returns (positions [n,3], profiles [n,d], edges [m,2], region labels).
@@ -22,6 +24,12 @@ def dti_like_pointcloud(
     Points fill a cubic lattice patch (2 mm voxels in the paper); each
     belongs to a latent region whose mean connectivity profile it inherits
     with noise — so cross-correlation clustering can recover the regions.
+
+    ``neighbors="knn"`` swaps the ε-ball edge list for spatial kNN pairs —
+    the bounded-degree variant matching the device Stage-1 contract
+    (``build_knn_graph`` / ``spectral_cluster_from_points``).
+    ``neighbors="none"`` skips host edge construction entirely (returns an
+    empty edge list) for consumers that build the graph on device.
     """
     rng = np.random.default_rng(seed)
     side = int(np.ceil(n_points ** (1 / 3)))
@@ -33,5 +41,12 @@ def dti_like_pointcloud(
     region = d2.argmin(1)
     base = rng.normal(size=(n_regions, d_profile)).astype(np.float32) * 3
     profiles = base[region] + rng.normal(size=(n_points, d_profile)).astype(np.float32)
-    edges = eps_neighbors(pos, eps)
+    if neighbors == "none":
+        edges = np.zeros((0, 2), np.int64)
+    elif neighbors == "knn":
+        edges = knn_edges(pos, knn_k)
+    elif neighbors == "eps":
+        edges = eps_neighbors(pos, eps)
+    else:
+        raise ValueError(f"neighbors must be 'eps', 'knn', or 'none', got {neighbors!r}")
     return pos, profiles, edges, region

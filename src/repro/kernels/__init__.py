@@ -7,6 +7,8 @@ Each kernel package ships three files:
   ref.py    — the pure-jnp oracle the tests assert against.
 
 Kernels:
+  knn_topk      — fused pairwise-distance + online top-k (Stage 1 hot op:
+                  device-resident kNN graph construction, no n×n matrix).
   kmeans_assign — fused pairwise-distance + online argmin (Stage 3 hot op).
   ell_spmv      — blocked-ELL SpMV (Stage 2 hot op, single vector).
   ell_spmm      — blocked-ELL multi-vector SpMM (Stage 2 hot op in block-

@@ -1,0 +1,19 @@
+"""Shared shape-padding helpers for the kernel wrapper layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(a: jax.Array, size: int, axis: int, value=0.0):
+    """Zero-pad (or ``value``-pad) ``a`` up to ``size`` along ``axis``."""
+    pad = size - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

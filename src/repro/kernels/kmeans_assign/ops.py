@@ -12,21 +12,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._util import pad_to as _pad_to, round_up as _round_up
 from repro.kernels.kmeans_assign.kernel import kmeans_assign_pallas
 from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
-
-
-def _pad_to(a: jax.Array, size: int, axis: int, value=0.0):
-    pad = size - a.shape[axis]
-    if pad <= 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths, constant_values=value)
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
 
 
 @partial(jax.jit, static_argnames=("block_q", "block_k", "impl", "interpret"))

@@ -1,0 +1,115 @@
+"""Fused kNN top-k Pallas kernel (TPU target) — the Stage-1 neighbor search.
+
+Computes, for every query point, the k nearest candidate points and their
+squared distances WITHOUT materializing the n×n distance matrix in HBM —
+the paper's Alg. 1 assumes the ε-edge list is given; at framework scale the
+neighbor search itself is the scalability gate (221 s serial vs 0.033 s
+parallel in Table III).
+
+Design (flash-attention-style online reduction, same skeleton as
+``kernels/kmeans_assign``):
+
+* grid = (n_q // block_q, n_c // block_k); the candidate axis is the *minor*
+  grid axis, so for a fixed query block the kernel sweeps candidate tiles
+  sequentially and folds a running per-row (dist, idx) top-k pair held in
+  the output VMEM blocks (revisited across the minor axis — TPU Pallas
+  guarantees sequential grid order, so the accumulator pattern is safe);
+* the distance tile uses the paper's BLAS identity (Eq. 12):
+  ``S = ‖c‖² − 2 x·cᵀ`` — the per-row ‖x‖² term is constant under the
+  top-k ordering and is added back by the wrapper, so the MXU does the
+  heavy lifting (block_q × d @ d × block_k matmul per tile, fp32 acc);
+* the merge folds the candidate tile into the running top-k by ``k_pad``
+  unrolled min-extract-mask passes over the [block_q, k_pad + block_k]
+  concatenation — pure VPU reductions, no sort network needed.  Extracted
+  entries come out ascending, so the output rows are sorted by distance;
+* self-pairs (global query id == global candidate id) are masked to +inf
+  inside the kernel; padded candidates are excluded by the wrapper setting
+  their ‖c‖² to +inf (identical trick to ``kmeans_assign``).
+
+VMEM working set per step: x tile (block_q·d) + c tile (block_k·d) + S tile
+(block_q·block_k) + merged (block_q·(k_pad+block_k))·2, all fp32 ⇒ with the
+default 256/256 blocks, d ≤ 1024 and k_pad ≤ 128 this is ≈ 2 MB, well
+inside a v5e core's 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cn_ref, xq_ref, xc_ref, dist_ref, idx_ref, *, block_q: int,
+            block_k: int, k_pad: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    xq = xq_ref[...]  # [bq, d]
+    xc = xc_ref[...]  # [bk, d]
+    # S_tile = ‖c‖² − 2 x·cᵀ   (row-constant ‖x‖² added by the wrapper)
+    s = cn_ref[...][None, :] - 2.0 * jax.lax.dot_general(
+        xq,
+        xc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [bq, bk]
+    rows_g = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols_g = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    s = jnp.where(rows_g == cols_g, jnp.inf, s)  # a point is not its own neighbor
+
+    # Merge the candidate tile into the running top-k: k_pad min-extract-mask
+    # passes over the concatenation.  Ascending extraction order keeps the
+    # running buffer sorted; ties resolve to the earliest slot, which prefers
+    # already-kept entries (stable across tiles).
+    merged_d = jnp.concatenate([dist_ref[...], s], axis=1)  # [bq, k_pad+bk]
+    merged_i = jnp.concatenate([idx_ref[...], cols_g], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, merged_d.shape, 1)
+    out_d, out_i = [], []
+    for _ in range(k_pad):
+        am = jnp.argmin(merged_d, axis=1).astype(jnp.int32)  # [bq]
+        hit = lane == am[:, None]
+        out_d.append(jnp.min(merged_d, axis=1))
+        out_i.append(jnp.where(hit, merged_i, 0).sum(axis=1))  # one hit per row
+        merged_d = jnp.where(hit, jnp.inf, merged_d)
+    dist_ref[...] = jnp.stack(out_d, axis=1)
+    idx_ref[...] = jnp.stack(out_i, axis=1)
+
+
+def knn_topk_pallas(
+    x: jax.Array,  # [n_p, d] padded points (queries == candidates)
+    c_norm: jax.Array,  # [n_p] ‖x‖² with +inf on padded rows
+    k_pad: int,
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+):
+    """Raw kernel entry: returns (dist [n_p, k_pad] without the ‖x‖² row
+    term, idx [n_p, k_pad] int32; unfilled slots are (+inf, stale))."""
+    n, d = x.shape
+    assert n % block_q == 0 and n % block_k == 0, (n, block_q, block_k)
+    grid = (n // block_q, n // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k, k_pad=k_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),  # ‖c‖² tile
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),  # query tile
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),  # candidate tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),  # running dists
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),  # running ids
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n, k_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(c_norm, x, x)

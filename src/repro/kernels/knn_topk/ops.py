@@ -1,0 +1,75 @@
+"""Public jit'd wrapper for the fused kNN top-k kernel.
+
+Handles shape padding (n→block multiples, d→128 multiple, k→8 multiple),
+adds the row-constant ‖x‖² back into the returned distances, masks padded /
+exhausted slots to (+inf, -1), and picks the execution path: real Pallas on
+TPU, interpret-mode Pallas for validation, or the jnp reference on other
+backends (the wrapper is what ``core.similarity.build_knn_graph`` calls).
+
+The ε-ball variant rides on the same reduction: ``eps`` additionally masks
+neighbors beyond the radius to (+inf, -1), giving a static-shape [n, k]
+ε-neighborhood (k caps the per-row degree — the HYB-style bound that keeps
+the result jit-friendly).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._util import pad_to as _pad_to, round_up as _round_up
+from repro.kernels.knn_topk.kernel import knn_topk_pallas
+from repro.kernels.knn_topk.ref import knn_topk_ref
+
+
+@partial(jax.jit, static_argnames=("k", "block_q", "block_k", "impl", "interpret"))
+def knn_topk(
+    x: jax.Array,  # [n, d]
+    k: int,
+    *,
+    eps: jax.Array | float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    impl: str = "auto",  # "auto" | "pallas" | "ref"
+    interpret: bool | None = None,
+):
+    """dist²[i, :], idx[i, :] = the k nearest neighbors of x_i (self excluded),
+    ascending by distance.  Invalid slots (k ≥ n, or beyond ``eps``) are
+    (+inf, -1).
+
+    On non-TPU backends ``auto`` falls back to the jnp reference — the Pallas
+    kernel is the TPU target and interpret mode is for tests.
+    """
+    n, d = x.shape
+    assert k >= 1, k
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu and not interpret):
+        dist, idx = knn_topk_ref(x, k)
+    else:
+        if interpret is None:
+            interpret = not on_tpu
+        bk = min(block_k, _round_up(n, 128))
+        bq = min(block_q, bk)
+        assert bk % bq == 0, (bq, bk)  # padded n must tile both grid axes
+        n_p = _round_up(n, bk)
+        d_p = _round_up(d, 128)
+        k_pad = _round_up(k, 8)
+
+        xf = _pad_to(_pad_to(x.astype(jnp.float32), n_p, 0), d_p, 1)
+        cn = (xf * xf).sum(1)
+        if n_p > n:  # padded candidates must never enter the top-k
+            cn = cn.at[n:].set(jnp.inf)
+        raw, idx = knn_topk_pallas(xf, cn, k_pad, block_q=bq, block_k=bk,
+                                   interpret=interpret)
+        raw, idx = raw[:n, :k], idx[:n, :k]
+        qn = (x.astype(jnp.float32) ** 2).sum(1)
+        invalid = jnp.isinf(raw)
+        dist = jnp.where(invalid, jnp.inf, jnp.maximum(raw + qn[:, None], 0.0))
+        idx = jnp.where(invalid, -1, idx)
+
+    if eps is not None:
+        beyond = dist > jnp.asarray(eps, jnp.float32) ** 2
+        dist = jnp.where(beyond, jnp.inf, dist)
+        idx = jnp.where(beyond, -1, idx)
+    return dist, idx

@@ -21,4 +21,5 @@ from repro.sparse.ops import (  # noqa: F401
     normalize_sym,
     normalize_rw,
     symmetrize_coo,
+    sort_coo_rows,
 )

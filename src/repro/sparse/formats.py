@@ -35,12 +35,21 @@ def _register(cls, data_fields, meta_fields):
 
 @dataclasses.dataclass(frozen=True)
 class COO:
-    """Coordinate-format sparse matrix (the paper's Alg. 1 output format)."""
+    """Coordinate-format sparse matrix (the paper's Alg. 1 output format).
+
+    ``sorted_rows`` is a static structural tag: True iff ``row`` is
+    non-decreasing.  The segment-sum SpMV/SpMM consult it for the
+    ``indices_are_sorted`` hint — passing sorted=True over unsorted rows is
+    undefined behaviour in XLA scatter lowering, so producers that emit
+    unsorted coordinates (e.g. :func:`repro.sparse.ops.symmetrize_coo`) MUST
+    construct with ``sorted_rows=False``.
+    """
 
     row: jax.Array  # [nnz] int32
     col: jax.Array  # [nnz] int32
     val: jax.Array  # [nnz] float
     shape: Tuple[int, int]  # static
+    sorted_rows: bool = True  # static; True iff row ids are non-decreasing
 
     @property
     def nnz(self) -> int:
@@ -51,7 +60,7 @@ class COO:
         return self.val.dtype
 
 
-_register(COO, ["row", "col", "val"], ["shape"])
+_register(COO, ["row", "col", "val"], ["shape", "sorted_rows"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +145,9 @@ def coo_from_edges(
         val = np.bincount(inv, weights=val.astype(np.float64), minlength=uniq.size)
         row = (uniq // shape[1]).astype(np.int32)
         col = (uniq % shape[1]).astype(np.int32)
-    return COO(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype), shape)
+    sorted_rows = bool(sort or sum_duplicates or row.size == 0 or (np.diff(row) >= 0).all())
+    return COO(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val, dtype), shape,
+               sorted_rows=sorted_rows)
 
 
 def coo_to_csr(m: COO) -> CSR:
@@ -182,20 +193,19 @@ def csr_to_blockell(
 
     cols = np.zeros((pad_rows, width), np.int32)
     vals = np.zeros((pad_rows, width), data.dtype)
-    tail_r, tail_c, tail_v = [], [], []
-    for r in range(n_rows):
-        lo, hi = indptr[r], indptr[r + 1]
-        take = min(hi - lo, width)
-        cols[r, :take] = indices[lo : lo + take]
-        vals[r, :take] = data[lo : lo + take]
-        if hi - lo > width:
-            tail_r.append(np.full(hi - lo - width, r, np.int32))
-            tail_c.append(indices[lo + width : hi])
-            tail_v.append(data[lo + width : hi])
-    if tail_r:
-        tr = np.concatenate(tail_r)
-        tc = np.concatenate(tail_c)
-        tv = np.concatenate(tail_v)
+    # Vectorized bucketed scatter (no Python row loop): every nnz knows its
+    # row and its slot within the row; slots < width land in the ELL body,
+    # the rest spill to the COO tail.  CSR ordering makes the tail row-sorted.
+    nnz_row = np.repeat(np.arange(n_rows, dtype=np.int64), deg)
+    slot = np.arange(indices.size, dtype=np.int64) - np.repeat(indptr[:-1].astype(np.int64), deg)
+    body = slot < width
+    cols[nnz_row[body], slot[body]] = indices[body]
+    vals[nnz_row[body], slot[body]] = data[body]
+    spill = ~body
+    if spill.any():
+        tr = nnz_row[spill].astype(np.int32)
+        tc = indices[spill].astype(np.int32)
+        tv = data[spill]
     else:  # keep a 1-element dummy so shapes stay non-degenerate under jit
         tr = np.zeros(1, np.int32)
         tc = np.zeros(1, np.int32)

@@ -14,11 +14,17 @@ from repro.sparse.formats import COO, CSR, BlockELL, coo_from_edges
 Array = jax.Array
 
 
-def spmv_coo(m: COO, x: Array, *, sorted_rows: bool = True) -> Array:
+def spmv_coo(m: COO, x: Array, *, sorted_rows: bool | None = None) -> Array:
     """y = W @ x  via gather + segment_sum (the TPU-native cusparseDcsrmv).
 
     Accumulates in fp32 regardless of storage dtype — Lanczos needs it.
+    ``sorted_rows=None`` (default) trusts the matrix's own ``sorted_rows``
+    tag; segment_sum with ``indices_are_sorted=True`` over unsorted rows is
+    undefined behaviour on accelerator backends, so never override to True
+    unless you know the layout.
     """
+    if sorted_rows is None:
+        sorted_rows = m.sorted_rows
     gathered = m.val.astype(jnp.float32) * x[m.col].astype(jnp.float32)
     y = jax.ops.segment_sum(
         gathered, m.row, num_segments=m.shape[0], indices_are_sorted=sorted_rows
@@ -26,7 +32,7 @@ def spmv_coo(m: COO, x: Array, *, sorted_rows: bool = True) -> Array:
     return y.astype(x.dtype)
 
 
-def spmm_coo(m: COO, x: Array, *, sorted_rows: bool = True) -> Array:
+def spmm_coo(m: COO, x: Array, *, sorted_rows: bool | None = None) -> Array:
     """Y = W @ X for dense X [n, d] — the block-Lanczos / GNN aggregation op.
 
     Implemented as d statically-unrolled 1-D segment sums rather than one
@@ -36,6 +42,8 @@ def spmm_coo(m: COO, x: Array, *, sorted_rows: bool = True) -> Array:
     kernel's job anyway.  Column count d is static under jit, so the unroll
     is free.
     """
+    if sorted_rows is None:
+        sorted_rows = m.sorted_rows
     val = m.val.astype(jnp.float32)
     cols = [
         jax.ops.segment_sum(
@@ -86,7 +94,7 @@ def normalize_rw(m: COO, deg: Array | None = None) -> COO:
     """D^{-1} W — the paper's Alg. 2 (ScaleElements kernel).  Row-stochastic."""
     d = degrees(m) if deg is None else deg
     inv = jnp.where(d > 0, 1.0 / d, 0.0)
-    return COO(m.row, m.col, m.val * inv[m.row], m.shape)
+    return COO(m.row, m.col, m.val * inv[m.row], m.shape, sorted_rows=m.sorted_rows)
 
 
 def normalize_sym(m: COO, deg: Array | None = None) -> COO:
@@ -94,18 +102,36 @@ def normalize_sym(m: COO, deg: Array | None = None) -> COO:
     form; same spectrum as D^{-1}W, see DESIGN.md §8)."""
     d = degrees(m) if deg is None else deg
     inv_sqrt = jnp.where(d > 0, jax.lax.rsqrt(d.astype(jnp.float32)), 0.0).astype(m.val.dtype)
-    return COO(m.row, m.col, m.val * inv_sqrt[m.row] * inv_sqrt[m.col], m.shape)
+    return COO(m.row, m.col, m.val * inv_sqrt[m.row] * inv_sqrt[m.col], m.shape,
+               sorted_rows=m.sorted_rows)
 
 
 def symmetrize_coo(m: COO) -> COO:
     """(W + Wᵀ)/2 expressed in host-free COO form: concat + re-sort not
     possible inside jit with static shapes, so this doubles nnz and relies on
     duplicate-tolerant segment sums downstream.  Use in pipelines that accept
-    duplicate coordinates (all our consumers do)."""
+    duplicate coordinates (all our consumers do).
+
+    The result is tagged ``sorted_rows=False``: the appended transpose half
+    carries the original *column* ids as rows, which are not sorted — feeding
+    the output into a segment sum with ``indices_are_sorted=True`` silently
+    corrupts results on accelerator backends.  :func:`sort_coo_rows` restores
+    a sorted layout on device when downstream cost matters.
+    """
     row = jnp.concatenate([m.row, m.col])
     col = jnp.concatenate([m.col, m.row])
     val = jnp.concatenate([m.val, m.val]) * 0.5
-    return COO(row, col, val, m.shape)
+    return COO(row, col, val, m.shape, sorted_rows=False)
+
+
+def sort_coo_rows(m: COO) -> COO:
+    """Row-major re-sort *on device* (jit-safe, static nnz).  A stable sort
+    on the row ids preserves in-row column order, which is all the segment
+    sums and the CSR/ELL converters care about."""
+    if m.sorted_rows:
+        return m
+    order = jnp.argsort(m.row, stable=True)
+    return COO(m.row[order], m.col[order], m.val[order], m.shape, sorted_rows=True)
 
 
 def coo_identity_minus(m: COO) -> COO:

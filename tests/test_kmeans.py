@@ -69,6 +69,43 @@ def test_kmeanspp_beats_random_init_inertia():
     assert float(r_pp.inertia) <= float(r_rd.inertia) * 1.05
 
 
+def test_assign_auto_propagates_real_kernel_bugs(monkeypatch):
+    """`assign="auto"` may only fall back on unavailability (ImportError /
+    NotImplementedError) — a genuine kernel bug must propagate, not silently
+    degrade to the reference path (the pre-fix bare `except Exception`)."""
+    import repro.core.kmeans as km_mod
+    import repro.kernels.kmeans_assign.ops as ops_mod
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 4)), jnp.float32)
+    c = x[:3]
+    cfg = KMeansConfig(k=3, assign="auto")
+
+    def broken(*a, **kw):
+        raise ValueError("kernel bug")
+
+    monkeypatch.setattr(ops_mod, "kmeans_assign", broken)
+    with pytest.raises(ValueError, match="kernel bug"):
+        km_mod._assign(x, c, None, cfg)
+
+    def unavailable(*a, **kw):
+        raise NotImplementedError("no TPU")
+
+    monkeypatch.setattr(ops_mod, "kmeans_assign", unavailable)
+    monkeypatch.setattr(km_mod, "_fallback_warned", False)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        labels, dmin = km_mod._assign(x, c, None, cfg)
+    want_labels, want_dmin = assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(want_labels))
+    # warn-once: a second fallback is silent
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        km_mod._assign(x, c, None, cfg)
+    # assign="fused" re-raises even unavailability
+    with pytest.raises(NotImplementedError):
+        km_mod._assign(x, c, None, KMeansConfig(k=3, assign="fused"))
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(20, 200), k=st.integers(2, 8), d=st.integers(1, 10), seed=st.integers(0, 10**6))
 def test_property_lloyd_never_increases_inertia(n, k, d, seed):

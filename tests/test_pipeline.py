@@ -82,6 +82,49 @@ def test_distributed_pipeline_matches_single_device():
     assert _nmi(labels, truth) > 0.95
 
 
+def _blobs(k, n_per, d, spread=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    # well-separated centers: one per axis-scaled corner, not random draws
+    centers = (rng.permutation(np.eye(k, d)) * 20.0).astype(np.float32)
+    x = np.concatenate([c + spread * rng.normal(size=(n_per, d)) for c in centers])
+    return x.astype(np.float32), np.repeat(np.arange(k), n_per)
+
+
+def test_spectral_cluster_from_points_runs_on_device():
+    """Points → labels under one jit (no host neighbor loop in the jit path),
+    recovering well-separated blobs.  The kNN graph of disjoint blobs is
+    fully disconnected ⇒ the top adjacency eigenvalue has multiplicity 4,
+    which single-vector Lanczos cannot resolve from one start vector — block
+    mode (PR 1) captures the whole degenerate subspace in one block step."""
+    from repro.core.pipeline import spectral_cluster_from_points
+
+    x, truth = _blobs(4, 100, 8, seed=3)
+    cfg = SpectralClusteringConfig(n_clusters=4, lanczos_block_size=4)
+    out = jax.jit(lambda xx, key: spectral_cluster_from_points(
+        xx, cfg, key, knn_k=10, sigma=2.0))(jnp.asarray(x), jax.random.PRNGKey(0))
+    assert _nmi(out.labels, truth) > 0.95
+    ev = np.asarray(out.eigenvalues)
+    assert (ev[:4] < 1e-3).all()  # 4 disconnected components → 4 zero eigs
+
+
+def test_spectral_cluster_from_points_matches_host_stage1():
+    """Device Stage 1 and the host knn_edges+build_similarity_graph path feed
+    Stages 2-3 identically (the ×2 weight scale cancels in normalization)."""
+    from repro.core.pipeline import spectral_cluster_from_points
+    from repro.core.similarity import build_similarity_graph, knn_edges
+
+    x, truth = _blobs(3, 80, 6, seed=7)
+    cfg = SpectralClusteringConfig(n_clusters=3, lanczos_block_size=3)
+    out_dev = spectral_cluster_from_points(
+        jnp.asarray(x), cfg, jax.random.PRNGKey(0), knn_k=8, sigma=2.0)
+    w = build_similarity_graph(x, knn_edges(x, 8), measure="exp_decay", sigma=2.0)
+    out_host = spectral_cluster(w, cfg, jax.random.PRNGKey(0))
+    assert _nmi(out_dev.labels, truth) > 0.95
+    assert _nmi(out_dev.labels, out_host.labels) > 0.95
+    np.testing.assert_allclose(np.asarray(out_dev.eigenvalues),
+                               np.asarray(out_host.eigenvalues), atol=1e-3)
+
+
 def test_similarity_stage_feeds_pipeline():
     """Stage 1 (points → graph) + Stages 2-3 recover planted regions."""
     from repro.core.similarity import build_similarity_graph

@@ -1,12 +1,20 @@
 """Stage 1 (Alg. 1) similarity construction vs numpy oracles."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.similarity import (
-    build_similarity_graph, edge_similarities, eps_neighbors, knn_edges,
+    build_knn_graph, build_similarity_graph, edge_similarities, eps_neighbors,
+    knn_edges,
 )
+
+
+def _dense(w, n):
+    d = np.zeros((n, n))
+    np.add.at(d, (np.asarray(w.row), np.asarray(w.col)), np.asarray(w.val))
+    return d
 
 
 def _oracle_crosscorr(x, e):
@@ -74,3 +82,99 @@ def test_property_knn_degree(n, k, seed):
     # every node appears as a source exactly min(k, n-1) times
     src_counts = np.bincount(e[:, 0], minlength=n)
     assert (src_counts == min(k, n - 1)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 30), dup=st.integers(2, 4), k=st.integers(1, 6),
+       seed=st.integers(0, 10**5))
+def test_property_knn_degree_duplicate_points(n, dup, k, seed):
+    """Duplicate points must not inflate the per-row degree: pre-fix,
+    argpartition could drop the self index from the candidate set and leave
+    k+1 survivors."""
+    base = np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+    pts = np.repeat(base, dup, axis=0)  # every point has dup-1 exact twins
+    total = pts.shape[0]
+    kk = min(k, total - 1)
+    e = knn_edges(pts, kk, block=7)  # odd block: exercise block boundaries
+    src_counts = np.bincount(e[:, 0], minlength=total)
+    assert (src_counts == kk).all()
+    assert (e[:, 0] != e[:, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# Device-resident Stage 1 (build_knn_graph)
+# ---------------------------------------------------------------------------
+
+def test_build_knn_graph_matches_host_path_exp_decay():
+    """Device path == host knn_edges + build_similarity_graph, up to the
+    documented ×2 symmetrization scale (host sums mirrored duplicates, device
+    averages (W+Wᵀ)/2)."""
+    rng = np.random.default_rng(4)
+    n, k = 180, 6
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    wd = build_knn_graph(jnp.asarray(x), k, measure="exp_decay", sigma=1.2)
+    wh = build_similarity_graph(x, knn_edges(x, k), measure="exp_decay", sigma=1.2)
+    np.testing.assert_allclose(2.0 * _dense(wd, n), _dense(wh, n), rtol=1e-4, atol=1e-6)
+    # device output contract: sorted rows, symmetric, jit-safe static nnz
+    assert wd.sorted_rows is True
+    assert (np.diff(np.asarray(wd.row)) >= 0).all()
+    assert wd.nnz == 2 * n * k
+    np.testing.assert_allclose(_dense(wd, n), _dense(wd, n).T, atol=1e-6)
+
+
+def test_build_knn_graph_matches_host_path_cross_correlation():
+    rng = np.random.default_rng(8)
+    n, k = 120, 5
+    x = rng.normal(size=(n, 12)).astype(np.float32)
+    wd = build_knn_graph(jnp.asarray(x), k, measure="cross_correlation")
+    wh = build_similarity_graph(x, knn_edges(x, k), measure="cross_correlation")
+    np.testing.assert_allclose(2.0 * _dense(wd, n), _dense(wh, n), rtol=2e-4, atol=1e-5)
+
+
+def test_build_knn_graph_separate_points_space():
+    """Neighbor search on positions, weights from profiles (DTI contract)."""
+    rng = np.random.default_rng(11)
+    n, k = 90, 4
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    prof = rng.normal(size=(n, 16)).astype(np.float32)
+    wd = build_knn_graph(jnp.asarray(prof), k, points=jnp.asarray(pos),
+                         measure="cross_correlation")
+    wh = build_similarity_graph(prof, knn_edges(pos, k), measure="cross_correlation")
+    np.testing.assert_allclose(2.0 * _dense(wd, n), _dense(wh, n), rtol=2e-4, atol=1e-5)
+
+
+def test_build_knn_graph_separate_points_exp_decay_uses_feature_distances():
+    """exp_decay weights must be measured in feature space even when the
+    neighbor search ran in a separate ``points`` space — the fused
+    distance-reuse shortcut only applies when the two spaces coincide."""
+    rng = np.random.default_rng(13)
+    n, k = 70, 5
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    prof = rng.normal(size=(n, 10)).astype(np.float32)
+    wd = build_knn_graph(jnp.asarray(prof), k, points=jnp.asarray(pos),
+                         measure="exp_decay", sigma=1.7)
+    wh = build_similarity_graph(prof, knn_edges(pos, k), measure="exp_decay",
+                                sigma=1.7)
+    np.testing.assert_allclose(2.0 * _dense(wd, n), _dense(wh, n), rtol=2e-4, atol=1e-5)
+
+
+def test_build_knn_graph_is_jit_safe():
+    """The whole Stage 1 must trace (no host neighbor loop in the jit path)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(64, 6)), jnp.float32)
+    fn = jax.jit(lambda xx: build_knn_graph(xx, 4, measure="exp_decay"))
+    w = fn(x)
+    w2 = build_knn_graph(x, 4, measure="exp_decay")
+    np.testing.assert_allclose(np.asarray(w.val), np.asarray(w2.val), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(w.row), np.asarray(w2.row))
+
+
+def test_build_knn_graph_eps_caps_radius():
+    rng = np.random.default_rng(9)
+    n, k, eps = 100, 8, 1.0
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    w = build_knn_graph(jnp.asarray(x), k, measure="exp_decay", eps=eps)
+    r, c, v = np.asarray(w.row), np.asarray(w.col), np.asarray(w.val)
+    live = v > 0
+    d = np.sqrt(((x[r[live]] - x[c[live]]) ** 2).sum(1))
+    assert (d <= eps + 1e-5).all()

@@ -6,8 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.sparse.formats import coo_from_edges, coo_to_csr, csr_to_blockell
 from repro.sparse.ops import (
-    degrees, normalize_rw, normalize_sym, spmm_blockell, spmm_coo, spmv_coo,
-    spmv_csr, spmv_blockell, symmetrize_coo,
+    degrees, normalize_rw, normalize_sym, sort_coo_rows, spmm_blockell,
+    spmm_coo, spmv_coo, spmv_csr, spmv_blockell, symmetrize_coo,
 )
 
 
@@ -105,6 +105,63 @@ def test_symmetrize():
         np.asarray(spmv_coo(s, jnp.asarray(x), sorted_rows=False)),
         0.5 * (W + W.T) @ x, rtol=1e-4, atol=1e-5,
     )
+
+
+def test_unsorted_coo_segment_sum_regression():
+    """symmetrize_coo emits *unsorted* rows; feeding its output straight into
+    spmv_coo/spmm_coo (no explicit flag) must still be correct.  Pre-fix,
+    COO carried no sortedness tag and both ops defaulted to
+    ``indices_are_sorted=True`` — undefined segment_sum behaviour that
+    silently corrupts results on accelerator backends."""
+    W, coo = _rand(60, 0.1, seed=17)
+    s = symmetrize_coo(coo)
+    # the producer must declare its unsorted layout...
+    assert s.sorted_rows is False
+    assert not (np.diff(np.asarray(s.row)) >= 0).all()  # really unsorted
+    # ...and the default consumer path must honor it
+    Wsym = 0.5 * (W + W.T)
+    x = np.random.default_rng(0).normal(size=(60,)).astype(np.float32)
+    X = np.random.default_rng(1).normal(size=(60, 5)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(spmv_coo(s, jnp.asarray(x))), Wsym @ x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(spmm_coo(s, jnp.asarray(X))), Wsym @ X, rtol=1e-4, atol=1e-5)
+    # the tag survives normalization (the pipeline's very next step)
+    assert normalize_sym(s).sorted_rows is False
+    assert normalize_rw(s).sorted_rows is False
+    np.testing.assert_allclose(
+        np.asarray(degrees(s)), Wsym.sum(1), rtol=1e-4, atol=1e-5)
+
+
+def test_sort_coo_rows_restores_sorted_layout():
+    W, coo = _rand(50, 0.1, seed=23)
+    s = sort_coo_rows(symmetrize_coo(coo))
+    assert s.sorted_rows is True
+    r = np.asarray(s.row)
+    assert (np.diff(r) >= 0).all()
+    x = np.random.default_rng(2).normal(size=(50,)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(spmv_coo(s, jnp.asarray(x))), 0.5 * (W + W.T) @ x,
+        rtol=1e-4, atol=1e-5)
+
+
+def test_coo_from_edges_tags_unsorted_input():
+    r = np.array([2, 0, 1])
+    c = np.array([0, 1, 2])
+    v = np.ones(3, np.float32)
+    assert coo_from_edges(r, c, v, (3, 3), sort=False).sorted_rows is False
+    assert coo_from_edges(r, c, v, (3, 3), sort=True).sorted_rows is True
+    # unsorted build path still detects already-sorted rows
+    assert coo_from_edges(c, c, v, (3, 3), sort=False).sorted_rows is True
+
+
+def test_csr_to_blockell_tail_is_row_sorted():
+    """The vectorized HYB split keeps the spill tail row-major (CSR order)."""
+    W, coo = _rand(200, 0.08, seed=31)
+    ell = csr_to_blockell(coo_to_csr(coo), block_rows=8, width_quantile=0.3)
+    tr = np.asarray(ell.tail.row)
+    assert (np.diff(tr) >= 0).all()
+    assert ell.tail.sorted_rows is True
 
 
 @settings(max_examples=15, deadline=None)
