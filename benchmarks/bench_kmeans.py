@@ -1,49 +1,122 @@
 """Paper Tables III-VI — k-means stage (the paper's 100-400× claims).
 
-Compares: (a) our jit BLAS-trick k-means (the paper's GPU formulation),
-(b) a naive per-point Python loop (the Matlab-serial analogue, extrapolated),
-(c) matmul- vs segment-sum centroid update (the TPU-native replacement for
-the paper's Thrust sort-by-label).
+Sweeps the Lloyd-iteration engine — ``iter="two_pass"`` (assignment +
+separate centroid update; the n×k one-hot GEMM) vs ``iter="fused"`` (one
+data stream per iteration, :mod:`repro.kernels.kmeans_iter`) — across the
+large-k regime the paper targets (k up to 500 on 142k DTI points; we sweep
+k ∈ {64, 512, 2048} at n=20k, CPU-scaled) and writes ``BENCH_kmeans.json``:
+µs per Lloyd iteration, the HBM-traffic model from DESIGN.md §10, the
+fused-vs-two-pass speedup, and a bitwise label-parity check between the two
+engines.  ``--smoke`` shrinks the sweep for CI.
+
+Neither engine hardcodes ``assign="ref"`` any more — each runs its
+production dispatch for the current backend (two_pass: fused-assign kernel
+on TPU / reference elsewhere; fused: Pallas kernel on TPU / chunked online
+scan elsewhere).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
 from repro.core.kmeans import KMeansConfig, kmeans
 
+FIXED_ITERS = 5  # static trip count; µs/iter = total / FIXED_ITERS
 
-def _naive_iter_us(x: np.ndarray, c: np.ndarray, cap: int = 500) -> float:
-    import time
 
-    t0 = time.perf_counter()
-    for i in range(cap):
-        ((x[i][None, :] - c) ** 2).sum(1).argmin()
-    dt = time.perf_counter() - t0
-    return dt / cap * len(x) * 1e6
+def _bytes_per_iter(n: int, k: int, d: int, engine: str) -> int:
+    """DESIGN.md §10 traffic model (fp32): the fused engine streams x once
+    and keeps every n×k intermediate tile-local; two_pass streams x twice
+    and round-trips the n×k one-hot through memory (the materialized
+    reference assignment adds another n×k distance round-trip off-TPU)."""
+    if engine == "fused":
+        return 4 * n * d
+    return 4 * (2 * n * d + 2 * n * k)
+
+
+def _make_engine(x, k: int, engine: str):
+    cfg = KMeansConfig(k=k, iter=engine, fixed_iters=FIXED_ITERS)
+    return jax.jit(lambda xx, c0: kmeans(xx, cfg, jax.random.PRNGKey(0),
+                                        init_centroids=c0))
+
+
+def _time_engines(fns: dict, x, init, rounds: int = 5) -> dict:
+    """Interleaved min-of-N timing.  The engines are compared on the same
+    machine seconds apart, so per-engine medians taken back-to-back would
+    fold scheduler/allocator drift into the ratio; alternating rounds and
+    keeping each engine's best sample is the robust estimator under that
+    one-sided noise (same steady-state convention as bench_similarity)."""
+    for fn in fns.values():  # compile + first-touch outside the clock
+        jax.block_until_ready(fn(x, init))
+    best = {name: np.inf for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, init))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: dt * 1e6 / FIXED_ITERS for name, dt in best.items()}
+
+
+def sweep(out_path: str = "BENCH_kmeans.json", smoke: bool = False) -> dict:
+    n, d = (4000, 64) if smoke else (20000, 64)
+    ks = [64, 256] if smoke else [64, 512, 2048]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    entries = []
+    for k in ks:
+        init = x[:k]  # shared deterministic seeding: time Lloyd only
+        fns = {e: _make_engine(x, k, e) for e in ("two_pass", "fused")}
+        us = _time_engines(fns, x, init)
+        us_two, us_fused = us["two_pass"], us["fused"]
+        r_two = fns["two_pass"](x, init)
+        r_fused = fns["fused"](x, init)
+        lab_two, c_two = r_two.labels, r_two.centroids
+        lab_fused, c_fused = r_fused.labels, r_fused.centroids
+        labels_match = bool((np.asarray(lab_two) == np.asarray(lab_fused)).all())
+        cdiff = float(np.abs(np.asarray(c_two) - np.asarray(c_fused)).max())
+        speedup = us_two / us_fused
+        for engine, us in (("two_pass", us_two), ("fused", us_fused)):
+            b = _bytes_per_iter(n, k, d, engine)
+            emit(f"kmeans/iter={engine}_n{n}_k{k}_d{d}", us,
+                 f"model_GB/iter={b/1e9:.3f}"
+                 + (f";speedup={speedup:.2f}x" if engine == "fused" else ""))
+            entries.append({
+                "n": n, "k": k, "d": d, "engine": engine,
+                "us_per_iter": us,
+                "model_bytes_per_iter": b,
+                "speedup_vs_two_pass": speedup if engine == "fused" else 1.0,
+                "labels_match_two_pass_bitwise": labels_match,
+                "centroids_max_abs_diff": cdiff,
+            })
+        assert labels_match, (
+            f"fused/two_pass label divergence at n={n} k={k} — parity bug")
+
+    payload = {
+        "benchmark": "kmeans_lloyd_iteration",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "fixed_iters": FIXED_ITERS,
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
 
 
 def main() -> None:
-    rng = np.random.default_rng(0)
-    # DTI-shaped embedding (n=20k scaled from 142k, d=k=64 scaled from 500)
-    n, k = 20000, 64
-    x = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
-
-    for update in ("matmul", "segment"):
-        cfg = KMeansConfig(k=k, update=update, assign="ref", fixed_iters=10, init="kmeans++")
-        fn = jax.jit(lambda x, key: kmeans(x, cfg, key))
-        us = time_fn(fn, x, jax.random.PRNGKey(0))
-        emit(f"kmeans/jit_update={update}_n{n}_k{k}_10it", us,
-             f"{2.0*n*k*k*10/(us*1e-6)/1e9:.2f}GFLOPs(dist)")
-
-    # naive single-iteration assignment loop, extrapolated to 10 iters
-    c0 = np.asarray(x[:k])
-    us_naive = _naive_iter_us(np.asarray(x), c0) * 10
-    cfg = KMeansConfig(k=k, update="matmul", assign="ref", fixed_iters=10)
-    us_fast = time_fn(jax.jit(lambda x, key: kmeans(x, cfg, key)), x, jax.random.PRNGKey(0))
-    emit("kmeans/naive_python_loop_10it(extrap)", us_naive, f"speedup={us_naive/us_fast:.0f}x")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: n=4k, small-k sweep only")
+    args = ap.parse_args()
+    sweep(smoke=args.smoke)
 
 
 if __name__ == "__main__":

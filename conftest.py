@@ -17,3 +17,17 @@ if _ROOT not in sys.path:
 from tests._hypothesis_stub import install as _install_hypothesis_stub  # noqa: E402
 
 _install_hypothesis_stub()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _reset_kmeans_fallback_warnings():
+    """Warn-once state must not leak across tests (repro.core.kmeans keeps a
+    module-level registry so the fallback notice fires once per process)."""
+    yield
+    try:
+        from repro.core.kmeans import reset_fallback_warnings
+    except ImportError:  # collection of non-repro test files
+        return
+    reset_fallback_warnings()

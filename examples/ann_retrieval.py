@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--clusters", type=int, default=256)
     ap.add_argument("--nprobe", type=int, default=16)
     ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--kmeans-iter", choices=("fused", "two_pass"), default="fused",
+                    help="Lloyd engine: one-pass fused iteration (default) or "
+                         "the two-pass assignment+update baseline")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -39,11 +42,11 @@ def main() -> None:
 
     t0 = time.perf_counter()
     res = jax.jit(lambda x, key: kmeans(
-        x, KMeansConfig(k=args.clusters, max_iters=15, assign="ref"), key
+        x, KMeansConfig(k=args.clusters, max_iters=15, iter=args.kmeans_iter), key
     ))(jnp.asarray(cand), jax.random.PRNGKey(0))
     jax.block_until_ready(res.centroids)
-    print(f"[build] k-means IVF index: k={args.clusters} in {time.perf_counter()-t0:.2f}s "
-          f"({int(res.iterations)} Lloyd iters)")
+    print(f"[build] k-means IVF index: k={args.clusters} ({args.kmeans_iter}) "
+          f"in {time.perf_counter()-t0:.2f}s ({int(res.iterations)} Lloyd iters)")
 
     labels = np.asarray(res.labels)
     C = np.asarray(res.centroids)

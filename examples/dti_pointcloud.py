@@ -38,6 +38,8 @@ def main() -> None:
     ap.add_argument("--device-stage1", action="store_true",
                     help="device-resident Stage 1 (kNN kernel), points→labels in one jit")
     ap.add_argument("--knn", type=int, default=16, help="neighbors per voxel (device Stage 1)")
+    ap.add_argument("--kmeans-iter", choices=("fused", "two_pass"), default="fused",
+                    help="Stage-3 Lloyd engine (fused = one data stream/iter)")
     args = ap.parse_args()
     n = 142541 if args.full else args.n
     k = 500 if args.full else args.clusters
@@ -52,7 +54,8 @@ def main() -> None:
     print(f"[data] {len(pos)} voxels, {len(edges)} ε-pairs "
           f"({time.perf_counter()-t0:.2f}s)")
 
-    cfg = SpectralClusteringConfig(n_clusters=k, lanczos_tol=1e-4)
+    cfg = SpectralClusteringConfig(n_clusters=k, lanczos_tol=1e-4,
+                                   kmeans_iter=args.kmeans_iter)
     if args.device_stage1:
         import jax.numpy as jnp
 

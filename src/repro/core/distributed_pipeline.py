@@ -27,6 +27,7 @@ before handing the assembled graph to the plain jit pipeline.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Optional
 
@@ -36,7 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 import repro.core.kmeans as km
 import repro.core.lanczos as lz
-from repro.compat import shard_map as _shard_map
+from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.core.pipeline import (
     SpectralClusteringConfig,
     SpectralResult,
@@ -45,7 +46,7 @@ from repro.core.pipeline import (
 )
 import repro.core.laplacian as lap
 from repro.core.similarity import graph_from_knn
-from repro.kernels.knn_topk.ref import knn_topk_ref
+from repro.kernels.knn_topk.ops import knn_topk
 from repro.sparse.distributed import (
     ShardedCOO,
     make_sharded_spmm,
@@ -55,6 +56,14 @@ from repro.sparse.distributed import (
 )
 
 Array = jax.Array
+
+
+def _axis_tuple(axis) -> tuple:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _axis_size(mesh, axis) -> int:
+    return math.prod(mesh.shape[a] for a in _axis_tuple(axis))
 
 
 def _global_rows(sm: ShardedCOO) -> Array:
@@ -70,7 +79,8 @@ def normalize_sharded(sm: ShardedCOO, deg: Array) -> ShardedCOO:
     return dataclasses.replace(sm, val=val)
 
 
-def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024):
+def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
+                      impl: str = "auto", interpret: Optional[bool] = None):
     """Row-block-sharded Stage-1 neighbor search (the kNN analogue of
     :func:`repro.sparse.distributed.make_sharded_spmv`'s layout).
 
@@ -79,7 +89,11 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024):
     discipline as the SpMV; points are n·d floats — for Stage 1 this is the
     whole input, the analogue of the paper keeping the data matrix GPU-
     resident), and computes its rows' kNN against it.  Self-pairs are
-    excluded via the shard's global row offset (``axis_index · rows_local``).
+    excluded via the shard's global row offset (``axis_index · rows_local``),
+    threaded into the kernel's self-exclusion mask — so ``impl`` dispatches
+    exactly like the single-device path: the fused Pallas ``knn_topk``
+    kernel per shard on TPU (or under ``interpret``), the jnp reference
+    elsewhere.
 
     Returns ``knn(x) -> (dist² [n, k], idx [n, k])`` with rows sharded over
     ``axis``; outputs feed :func:`repro.core.similarity.graph_from_knn`.
@@ -90,12 +104,15 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024):
         mesh=mesh,
         in_specs=(P(axis, None),),
         out_specs=(P(axis, None), P(axis, None)),
+        # jax 0.4.x has no replication rule for pallas_call; outputs are all
+        # explicitly sharded over `axis`, so the check adds nothing here.
+        **SHARD_MAP_NO_CHECK,
     )
     def knn(x_blk):
         x_full = jax.lax.all_gather(x_blk, axis, axis=0, tiled=True)
         offset = jax.lax.axis_index(axis) * x_blk.shape[0]
-        return knn_topk_ref(x_full, k, queries=x_blk, query_offset=offset,
-                            block_q=block_q)
+        return knn_topk(x_full, k, queries=x_blk, query_offset=offset,
+                        block_q=block_q, impl=impl, interpret=interpret)
 
     return knn
 
@@ -135,6 +152,104 @@ def spectral_cluster_from_points_sharded(
     idx = jax.lax.with_sharding_constraint(idx, rep)
     w = graph_from_knn(x, dist2, idx, measure=measure, sigma=sigma, eps=knn_eps)
     return spectral_cluster(w, cfg, key)
+
+
+def kmeans_sharded(
+    x: Array,
+    cfg: km.KMeansConfig,
+    key: Array,
+    *,
+    mesh,
+    axis="data",
+    init_centroids: Optional[Array] = None,
+) -> km.KMeansResult:
+    """Explicit-collective Stage 3: row-sharded Lloyd iterations with ONE
+    all-reduce per iteration.
+
+    Each shard runs the fused one-pass iteration
+    (:func:`repro.core.kmeans.lloyd_iter`) on its row block, packs its
+    partial statistics into a single ``[k, d+2]`` block —
+    ``[Σx | counts | label-changes]`` per cluster — and psums that once;
+    centroids, the convergence test, and the empty-cluster policy are then
+    computed redundantly-replicated per shard.  This replaces the GSPMD
+    formulation, whose one-hot GEMM update replicates the n×k one-hot
+    contraction and leaves the collective schedule to the partitioner.
+    The final-inertia psum happens once, outside the loop.
+
+    ``x.shape[0]`` must divide evenly by the mesh axis size.  Seeding runs
+    on the global (GSPMD-sharded) array — ``row_at``'s one-hot contractions
+    already shard cleanly.
+    """
+    if cfg.iter != "fused":
+        raise ValueError(
+            "kmeans_sharded runs the fused one-pass engine only (the "
+            "two-pass modes stay on the GSPMD formulation via km.kmeans); "
+            f"got KMeansConfig.iter={cfg.iter!r}")
+    axes = _axis_tuple(axis)
+    n, d = x.shape
+    k = cfg.k
+    assert n % _axis_size(mesh, axes) == 0, (n, mesh.shape)
+    c0 = km.seed_centroids(x, cfg, key) if init_centroids is None else init_centroids
+
+    @partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(axes), P(None, None), P(), P(), P()),
+        **SHARD_MAP_NO_CHECK,
+    )
+    def run(x_blk, c0):
+        xf = x_blk.astype(jnp.float32)
+        x_norm = (xf * xf).sum(1)
+        labels0 = jnp.full((x_blk.shape[0],), -1, jnp.int32)
+
+        def one_iter(c, labels):
+            new_labels, dmin, sums, counts = km.lloyd_iter(x_blk, c, x_norm, cfg)
+            changed_pc = jax.ops.segment_sum(
+                (new_labels != labels).astype(jnp.float32), new_labels,
+                num_segments=k)
+            packed = jnp.concatenate(
+                [sums, counts[:, None], changed_pc[:, None]], axis=1)
+            packed = jax.lax.psum(packed, axes)  # the iteration's one collective
+            new_c = km.centroids_from_sums(packed[:, :d], packed[:, d], c)
+            return new_c, new_labels, dmin, packed[:, d + 1].sum()
+
+        if cfg.fixed_iters is not None:
+            def fbody(_, st):
+                c, labels, dmin, changed = st
+                return one_iter(c, labels)
+
+            c, labels, dmin, changed = jax.lax.fori_loop(
+                0, cfg.fixed_iters, fbody,
+                (c0, labels0, jnp.zeros_like(x_norm), jnp.asarray(float(n))))
+            iters = jnp.asarray(cfg.fixed_iters)
+        else:
+            def wcond(st):
+                _, _, _, changed, it = st
+                return jnp.logical_and(changed > cfg.tol_changes,
+                                       it < cfg.max_iters)
+
+            def wbody(st):
+                c, labels, dmin, _, it = st
+                c, labels, dmin, changed = one_iter(c, labels)
+                return c, labels, dmin, changed, it + 1
+
+            c, labels, dmin, changed, iters = jax.lax.while_loop(
+                wcond, wbody,
+                (c0, labels0, jnp.zeros_like(x_norm), jnp.asarray(float(n)),
+                 jnp.asarray(0)))
+
+        inertia = jax.lax.psum(dmin.sum(), axes)  # once, outside the loop
+        return labels, c, inertia, iters, changed
+
+    labels, c, inertia, iters, changed = run(x, c0)
+    return km.KMeansResult(
+        labels=labels,
+        centroids=c.astype(x.dtype),
+        inertia=inertia,
+        iterations=iters,
+        shifted=changed,
+    )
 
 
 def spectral_cluster_sharded(
@@ -187,10 +302,18 @@ def spectral_cluster_sharded(
     h = lap.embed_rows(eig.eigenvectors, isd)
 
     kcfg = km.KMeansConfig(
-        k=cfg.n_clusters, max_iters=cfg.kmeans_max_iters, update=cfg.kmeans_update,
-        assign=cfg.kmeans_assign, fixed_iters=cfg.fixed_kmeans_iters,
+        k=cfg.n_clusters, max_iters=cfg.kmeans_max_iters, iter=cfg.kmeans_iter,
+        update=cfg.kmeans_update, assign=cfg.kmeans_assign,
+        fixed_iters=cfg.fixed_kmeans_iters,
     )
-    res = km.kmeans(h, kcfg, k_km)
+    # Stage 3: the shard_map variant gets the explicit one-psum-per-iteration
+    # Lloyd loop (fused iteration only — the two-pass mode stays on the GSPMD
+    # formulation, as do row counts that don't tile the mesh axis).
+    if (variant == "shard_map" and kcfg.iter == "fused" and mesh is not None
+            and n % _axis_size(mesh, axis) == 0):
+        res = kmeans_sharded(h, kcfg, k_km, mesh=mesh, axis=axis)
+    else:
+        res = km.kmeans(h, kcfg, k_km)
     return SpectralResult(
         labels=res.labels,
         embedding=h,

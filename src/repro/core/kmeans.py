@@ -4,20 +4,29 @@ TPU adaptation of the paper's GPU k-means:
 
 * distance matrix via the BLAS trick ``S = ‖v‖² + ‖c‖² − 2 V Cᵀ`` (Eq. 12-16)
   — an MXU matmul, exactly the paper's cuBLAS mapping;
-* **fused assign** (beyond-paper): :mod:`repro.kernels.kmeans_assign` computes
-  the distance tile and folds the row-argmin online in VMEM, never
-  materializing the n×k matrix in HBM (the paper's formulation is HBM-bound
-  for large n·k);
-* centroid update: the paper sorts points by label (Thrust radix sort) and
-  reduces consecutive runs.  TPU sorts are comparatively expensive, so we use
-  either ``segment_sum`` (VPU scatter-add) or a one-hot matmul ``Hᵀ V`` (MXU)
-  — selectable, benchmarked in benchmarks/bench_kmeans.py;
+* **fused iteration** (beyond-paper, the default): one Lloyd iteration =
+  assignment AND centroid accumulation from a single stream over the point
+  matrix — :mod:`repro.kernels.kmeans_iter` (Pallas on TPU: online argmin +
+  resident [k, d+1] accumulator; chunked ``lax.scan`` elsewhere).  Neither
+  the n×k distance matrix nor the n×k one-hot ever reaches HBM; per
+  iteration x is read once (the two-pass formulation reads it twice and
+  round-trips the n×k one-hot — memory-bound exactly where the paper's
+  large-k DTI runs live).  Traffic model in DESIGN.md §10;
+* **two-pass mode** (``iter="two_pass"``): the paper-faithful split kept for
+  comparison benchmarks — fused assign kernel
+  (:mod:`repro.kernels.kmeans_assign`) or materialized reference, then a
+  separate centroid update.  The paper sorts points by label (Thrust radix
+  sort) and reduces runs; TPU sorts are expensive, so the update is either
+  ``segment_sum`` (VPU scatter-add) or a one-hot matmul ``Hᵀ V`` (MXU) —
+  selectable, benchmarked in benchmarks/bench_kmeans.py;
 * k-means++ (Alg. 5) runs fully on device: the categorical draw
   ``P_j ∝ Dist_j²`` is a Gumbel-max over ``log Dist²`` — no host round trips.
 
 All entry points are jit-safe and shard cleanly with points over the data
-axis (centroids replicated; GSPMD turns the segment/one-hot reductions into
-a single [k,d] all-reduce per iteration).
+axis (centroids replicated).  Under GSPMD the fused iteration reduces to a
+single [k, d+1] all-reduce per iteration; the explicit-collective variant
+(one packed [k, d+2] psum carrying sums+counts+label-changes) lives in
+:mod:`repro.core.distributed_pipeline`.
 """
 from __future__ import annotations
 
@@ -28,6 +37,8 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels._util import KMEANS_BLOCK_K, KMEANS_BLOCK_Q
 
 Array = jax.Array
 
@@ -46,15 +57,48 @@ class KMeansConfig:
     max_iters: int = 100
     tol_changes: int = 0  # stop when <= this many labels change
     init: str = "kmeans++"  # "kmeans++" | "random"
-    update: str = "matmul"  # "matmul" (MXU) | "segment" (VPU scatter)
-    assign: str = "auto"  # "auto" | "ref" | "fused"
+    iter: str = "fused"  # "fused" (one-pass kmeans_iter) | "two_pass"
+    update: str = "matmul"  # two-pass update: "matmul" (MXU) | "segment" (VPU)
+    assign: str = "auto"  # two-pass assignment: "auto" | "ref" | "fused"
     fixed_iters: Optional[int] = None  # static trip count (dry-run/bench)
-    block_q: int = 1024  # fused-kernel tile sizes
-    block_k: int = 512
+    # kernel tile sizes — single source of truth in repro.kernels._util
+    block_q: int = KMEANS_BLOCK_Q
+    block_k: int = KMEANS_BLOCK_K
+    interpret: Optional[bool] = None  # run Pallas bodies in interpret mode
+
+    def __post_init__(self):
+        # a typo'd engine name must not silently select the other engine
+        if self.iter not in ("fused", "two_pass"):
+            raise ValueError(f"KMeansConfig.iter must be 'fused' or "
+                             f"'two_pass', got {self.iter!r}")
+        if self.init not in ("kmeans++", "random"):
+            raise ValueError(f"KMeansConfig.init must be 'kmeans++' or "
+                             f"'random', got {self.init!r}")
 
 
 # ---------------------------------------------------------------------------
-# assignment step
+# warn-once plumbing (fixture-resettable — the old module-global bool leaked
+# warn-once state across tests)
+# ---------------------------------------------------------------------------
+
+_FALLBACK_WARNED: set = set()
+
+
+def reset_fallback_warnings() -> None:
+    """Clear the warn-once registry (test fixtures; mirrors
+    ``warnings.resetwarnings`` semantics for our fallback notices)."""
+    _FALLBACK_WARNED.clear()
+
+
+def _warn_fallback_once(key: str, message: str) -> None:
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# assignment step (two-pass mode)
 # ---------------------------------------------------------------------------
 
 def assign_ref(x: Array, c: Array, x_norm: Optional[Array] = None):
@@ -69,40 +113,60 @@ def assign_ref(x: Array, c: Array, x_norm: Optional[Array] = None):
     return labels, dmin
 
 
-_fallback_warned = False
-
-
 def _assign(x, c, x_norm, cfg: KMeansConfig):
     # Only unavailability (missing/unported kernel) may fall back under
     # "auto" — a bare except here would silently mask real kernel bugs as a
     # slow reference path.  Anything else propagates.
-    global _fallback_warned
     if cfg.assign in ("fused", "auto"):
         try:
             from repro.kernels.kmeans_assign.ops import kmeans_assign as fused
 
-            return fused(x, c, x_norm=x_norm, block_q=cfg.block_q, block_k=cfg.block_k)
+            return fused(x, c, x_norm=x_norm, block_q=cfg.block_q,
+                         block_k=cfg.block_k, interpret=cfg.interpret)
         except (ImportError, NotImplementedError) as e:
             if cfg.assign == "fused":
                 raise
-            if not _fallback_warned:
-                _fallback_warned = True
-                warnings.warn(
-                    f"fused kmeans_assign kernel unavailable ({e!r}); "
-                    "falling back to the reference assignment path",
-                    RuntimeWarning,
-                    stacklevel=2,
-                )
+            _warn_fallback_once(
+                "kmeans_assign",
+                f"fused kmeans_assign kernel unavailable ({e!r}); "
+                "falling back to the reference assignment path",
+            )
     return assign_ref(x, c, x_norm)
 
 
 # ---------------------------------------------------------------------------
-# update step
+# fused iteration (assign + accumulate in one data stream)
+# ---------------------------------------------------------------------------
+
+def lloyd_iter(x: Array, c: Array, x_norm: Optional[Array], cfg: KMeansConfig):
+    """One Lloyd iteration's statistics ``(labels, dmin, sums, counts)``
+    from a single pass over ``x`` — see :mod:`repro.kernels.kmeans_iter`.
+
+    Unavailability of the Pallas kernel is handled inside the wrapper (the
+    chunked online path is a peer implementation, not a degraded shim), so
+    there is nothing to warn about here; genuine kernel bugs propagate.
+    """
+    from repro.kernels.kmeans_iter.ops import kmeans_iter
+
+    return kmeans_iter(x, c, x_norm=x_norm, block_q=cfg.block_q,
+                       block_k=cfg.block_k, interpret=cfg.interpret)
+
+
+def centroids_from_sums(sums: Array, counts: Array, prev: Array) -> Array:
+    """Means from accumulated (sums, counts); empty clusters keep their
+    previous centroid (the paper's implementation implicitly does the same)."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    c = sums / safe
+    return jnp.where(counts[:, None] > 0, c, prev.astype(jnp.float32)).astype(prev.dtype)
+
+
+# ---------------------------------------------------------------------------
+# update step (two-pass mode)
 # ---------------------------------------------------------------------------
 
 def update_centroids(x: Array, labels: Array, k: int, prev: Array, *, how: str = "matmul"):
-    """New centroids = per-cluster means; empty clusters keep their previous
-    centroid (the paper's implementation implicitly does the same)."""
+    """New centroids = per-cluster means via a full second pass over ``x``
+    (materializes the n×k one-hot under ``how="matmul"``)."""
     xf = x.astype(jnp.float32)
     if how == "matmul":
         h = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # [n, k]
@@ -111,9 +175,7 @@ def update_centroids(x: Array, labels: Array, k: int, prev: Array, *, how: str =
     else:
         sums = jax.ops.segment_sum(xf, labels, num_segments=k)
         counts = jax.ops.segment_sum(jnp.ones_like(labels, jnp.float32), labels, num_segments=k)
-    safe = jnp.maximum(counts, 1.0)[:, None]
-    c = sums / safe
-    return jnp.where(counts[:, None] > 0, c, prev.astype(jnp.float32)).astype(prev.dtype)
+    return centroids_from_sums(sums, counts, prev)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +229,13 @@ def random_init(x: Array, k: int, key: Array) -> Array:
     return jax.vmap(lambda i: row_at(x, i))(idx).astype(x.dtype)
 
 
+def seed_centroids(x: Array, cfg: KMeansConfig, key: Array) -> Array:
+    """Dispatch the configured seeding (shared with the sharded driver)."""
+    if cfg.init == "kmeans++":
+        return kmeanspp_init(x, cfg.k, key)
+    return random_init(x, cfg.k, key)
+
+
 # ---------------------------------------------------------------------------
 # driver (Alg. 4)
 # ---------------------------------------------------------------------------
@@ -179,17 +248,19 @@ def kmeans(x: Array, cfg: KMeansConfig, key: Array, *, init_centroids: Optional[
 
     if init_centroids is not None:
         c0 = init_centroids
-    elif cfg.init == "kmeans++":
-        c0 = kmeanspp_init(x, k, key)
     else:
-        c0 = random_init(x, k, key)
+        c0 = seed_centroids(x, cfg, key)
 
     labels0 = jnp.full((n,), -1, jnp.int32)
 
     def one_iter(c, labels):
-        new_labels, dmin = _assign(x, c, x_norm, cfg)
+        if cfg.iter == "fused":
+            new_labels, dmin, sums, counts = lloyd_iter(x, c, x_norm, cfg)
+            new_c = centroids_from_sums(sums, counts, c)
+        else:  # two_pass: re-stream x for the update
+            new_labels, dmin = _assign(x, c, x_norm, cfg)
+            new_c = update_centroids(x, new_labels, k, c, how=cfg.update)
         changed = (new_labels != labels).sum()
-        new_c = update_centroids(x, new_labels, k, c, how=cfg.update)
         return new_c, new_labels, dmin, changed
 
     if cfg.fixed_iters is not None:

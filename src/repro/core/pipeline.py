@@ -42,8 +42,9 @@ class SpectralClusteringConfig:
     lanczos_max_restarts: int = 60
     lanczos_block_size: int = 1  # Krylov block width b (>1: SpMM block mode)
     kmeans_max_iters: int = 100
-    kmeans_update: str = "matmul"
-    kmeans_assign: str = "auto"
+    kmeans_iter: str = "fused"  # one-pass Lloyd iteration | "two_pass"
+    kmeans_update: str = "matmul"  # two-pass centroid update
+    kmeans_assign: str = "auto"  # two-pass assignment path
     drop_first: bool = False  # drop the trivial eigenvector from the embedding
     fixed_restarts: Optional[int] = None  # static-cost mode (dry-run/bench)
     fixed_kmeans_iters: Optional[int] = None
@@ -112,6 +113,7 @@ def spectral_cluster(
     kcfg = km.KMeansConfig(
         k=cfg.n_clusters,
         max_iters=cfg.kmeans_max_iters,
+        iter=cfg.kmeans_iter,
         update=cfg.kmeans_update,
         assign=cfg.kmeans_assign,
         fixed_iters=cfg.fixed_kmeans_iters,

@@ -1,8 +1,17 @@
-"""Shared shape-padding helpers for the kernel wrapper layer."""
+"""Shared shape-padding helpers + tile defaults for the kernel wrapper layer."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# Single source of truth for the k-means kernel tile sizes — consumed by the
+# `kmeans_assign` / `kmeans_iter` kernel packages AND by
+# :class:`repro.core.kmeans.KMeansConfig` (which used to carry a drifted
+# block_q=1024 default while the kernels defaulted to 512).  1024 wins the
+# CPU chunked-scan sweep at n=20k/k=2048 (fewer, better-threaded GEMM steps)
+# and keeps the TPU per-step VMEM working set ≤ ~8 MB.
+KMEANS_BLOCK_Q = 1024
+KMEANS_BLOCK_K = 512
 
 
 def pad_to(a: jax.Array, size: int, axis: int, value=0.0):

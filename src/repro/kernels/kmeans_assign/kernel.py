@@ -15,9 +15,10 @@ Design (flash-attention-style online reduction):
   is added back by the wrapper, so the MXU does all the heavy lifting
   (block_q × d @ d × block_k matmul per tile, fp32 accumulation);
 * VMEM working set per step: x tile (block_q·d) + c tile (block_k·d)
-  + S tile (block_q·block_k), all fp32 ⇒ with the default 512/512 blocks
-  and d ≤ 1024 this is ≈ 5 MB, comfortably inside a v5e core's 16 MB VMEM;
-  block shapes are multiples of (8, 128) to keep the MXU/VPU aligned.
+  + S tile (block_q·block_k), all fp32 ⇒ with the default 1024/512 blocks
+  (``repro.kernels._util`` — shared with the config layer) and d ≤ 1024
+  this is ≈ 8 MB, comfortably inside a v5e core's 16 MB VMEM; block shapes
+  are multiples of (8, 128) to keep the MXU/VPU aligned.
 
 The n×k HBM round-trip this removes is exactly what makes the paper's
 unfused formulation memory-bound at large n·k — see EXPERIMENTS.md §Perf.
@@ -29,6 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels._util import KMEANS_BLOCK_K, KMEANS_BLOCK_Q
 
 
 def _kernel(c_norm_ref, x_ref, c_ref, min_ref, idx_ref, *, block_k: int):
@@ -60,8 +63,8 @@ def kmeans_assign_pallas(
     c: jax.Array,  # [k, d] (k % block_k == 0)
     c_norm: jax.Array,  # [k]
     *,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: int = KMEANS_BLOCK_Q,
+    block_k: int = KMEANS_BLOCK_K,
     interpret: bool = False,
 ):
     n, d = x.shape

@@ -12,7 +12,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels._util import pad_to as _pad_to, round_up as _round_up
+from repro.kernels._util import (
+    KMEANS_BLOCK_K,
+    KMEANS_BLOCK_Q,
+    pad_to as _pad_to,
+    round_up as _round_up,
+)
 from repro.kernels.kmeans_assign.kernel import kmeans_assign_pallas
 from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
 
@@ -23,8 +28,8 @@ def kmeans_assign(
     c: jax.Array,
     *,
     x_norm: jax.Array | None = None,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: int = KMEANS_BLOCK_Q,
+    block_k: int = KMEANS_BLOCK_K,
     impl: str = "auto",  # "auto" | "pallas" | "ref"
     interpret: bool | None = None,
 ):

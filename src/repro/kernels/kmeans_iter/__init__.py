@@ -1,0 +1,2 @@
+from repro.kernels.kmeans_iter.ops import kmeans_iter  # noqa: F401
+from repro.kernels.kmeans_iter.ref import kmeans_iter_ref  # noqa: F401

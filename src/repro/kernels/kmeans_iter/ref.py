@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused k-means iteration.
+
+The two-pass formulation spelled out: materialized n×k distance matrix for
+the assignment (paper Alg. 4) followed by the n×k one-hot GEMM for the
+centroid sums — exactly the HBM-bound path the fused kernel and the chunked
+fallback replace.  Used as the correctness reference in tests; never on a
+hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_iter_ref(x: jax.Array, c: jax.Array, x_norm: jax.Array | None = None):
+    """One Lloyd iteration's worth of statistics.
+
+    Returns ``(labels [n] int32, dmin [n] f32, sums [k, d] f32,
+    counts [k] f32)`` where ``sums[j] = Σ_{labels==j} x_i`` and ``counts[j]``
+    is the cluster population.  Ties in the argmin break low.
+    """
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xn = (xf * xf).sum(1) if x_norm is None else x_norm.astype(jnp.float32)
+    cn = (cf * cf).sum(1)
+    s = xn[:, None] + cn[None, :] - 2.0 * (xf @ cf.T)
+    labels = jnp.argmin(s, axis=1).astype(jnp.int32)
+    dmin = jnp.maximum(jnp.min(s, axis=1), 0.0)
+    h = jax.nn.one_hot(labels, cf.shape[0], dtype=jnp.float32)  # [n, k]
+    sums = h.T @ xf
+    counts = h.sum(axis=0)
+    return labels, dmin, sums, counts

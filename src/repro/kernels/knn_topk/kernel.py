@@ -24,7 +24,12 @@ Design (flash-attention-style online reduction, same skeleton as
   entries come out ascending, so the output rows are sorted by distance;
 * self-pairs (global query id == global candidate id) are masked to +inf
   inside the kernel; padded candidates are excluded by the wrapper setting
-  their ‖c‖² to +inf (identical trick to ``kmeans_assign``).
+  their ‖c‖² to +inf (identical trick to ``kmeans_assign``);
+* queries need not be the candidate set: the sharded Stage 1 passes its
+  local row block as queries plus the block's global row offset (an SMEM
+  scalar — ``axis_index · rows_per_shard`` under shard_map), which shifts
+  the self-exclusion iota so shard-local row ids line up with global
+  candidate ids.
 
 VMEM working set per step: x tile (block_q·d) + c tile (block_k·d) + S tile
 (block_q·block_k) + merged (block_q·(k_pad+block_k))·2, all fp32 ⇒ with the
@@ -38,9 +43,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(cn_ref, xq_ref, xc_ref, dist_ref, idx_ref, *, block_q: int,
+def _kernel(off_ref, cn_ref, xq_ref, xc_ref, dist_ref, idx_ref, *, block_q: int,
             block_k: int, k_pad: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -59,7 +65,8 @@ def _kernel(cn_ref, xq_ref, xc_ref, dist_ref, idx_ref, *, block_q: int,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # [bq, bk]
-    rows_g = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    rows_g = (off_ref[0, 0] + i * block_q
+              + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
     cols_g = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
     s = jnp.where(rows_g == cols_g, jnp.inf, s)  # a point is not its own neighbor
 
@@ -82,23 +89,29 @@ def _kernel(cn_ref, xq_ref, xc_ref, dist_ref, idx_ref, *, block_q: int,
 
 
 def knn_topk_pallas(
-    x: jax.Array,  # [n_p, d] padded points (queries == candidates)
-    c_norm: jax.Array,  # [n_p] ‖x‖² with +inf on padded rows
+    xq: jax.Array,  # [nq_p, d] padded queries
+    xc: jax.Array,  # [nc_p, d] padded candidates
+    c_norm: jax.Array,  # [nc_p] ‖c‖² with +inf on padded rows
     k_pad: int,
     *,
+    query_offset: jax.Array | int = 0,  # global row id of xq[0]
     block_q: int = 256,
     block_k: int = 256,
     interpret: bool = False,
 ):
-    """Raw kernel entry: returns (dist [n_p, k_pad] without the ‖x‖² row
-    term, idx [n_p, k_pad] int32; unfilled slots are (+inf, stale))."""
-    n, d = x.shape
-    assert n % block_q == 0 and n % block_k == 0, (n, block_q, block_k)
-    grid = (n // block_q, n // block_k)
+    """Raw kernel entry: returns (dist [nq_p, k_pad] without the ‖x‖² row
+    term, idx [nq_p, k_pad] int32; unfilled slots are (+inf, stale))."""
+    nq, d = xq.shape
+    nc = xc.shape[0]
+    assert nq % block_q == 0 and nc % block_k == 0, (nq, nc, block_q, block_k)
+    grid = (nq // block_q, nc // block_k)
+    off = jnp.asarray(query_offset, jnp.int32).reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_kernel, block_q=block_q, block_k=block_k, k_pad=k_pad),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),  # global query-row offset
             pl.BlockSpec((block_k,), lambda i, j: (j,)),  # ‖c‖² tile
             pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),  # query tile
             pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),  # candidate tile
@@ -108,8 +121,8 @@ def knn_topk_pallas(
             pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),  # running ids
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, k_pad), jnp.float32),
-            jax.ShapeDtypeStruct((n, k_pad), jnp.int32),
+            jax.ShapeDtypeStruct((nq, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(c_norm, x, x)
+    )(off, c_norm, xq, xc)

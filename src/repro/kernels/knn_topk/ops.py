@@ -25,9 +25,11 @@ from repro.kernels.knn_topk.ref import knn_topk_ref
 
 @partial(jax.jit, static_argnames=("k", "block_q", "block_k", "impl", "interpret"))
 def knn_topk(
-    x: jax.Array,  # [n, d]
+    x: jax.Array,  # [n, d] candidate points
     k: int,
     *,
+    queries: jax.Array | None = None,  # [nq, d]; defaults to x (all-pairs)
+    query_offset: jax.Array | int = 0,  # global row id of queries[0]
     eps: jax.Array | float | None = None,
     block_q: int = 256,
     block_k: int = 256,
@@ -38,6 +40,11 @@ def knn_topk(
     ascending by distance.  Invalid slots (k ≥ n, or beyond ``eps``) are
     (+inf, -1).
 
+    ``queries``/``query_offset`` serve the row-block sharded Stage 1: a shard
+    passes its local row block and its global row offset (traced —
+    ``axis_index * rows_per_shard`` under shard_map) so self-pairs are still
+    excluded against global candidate ids.
+
     On non-TPU backends ``auto`` falls back to the jnp reference — the Pallas
     kernel is the TPU target and interpret mode is for tests.
     """
@@ -45,25 +52,30 @@ def knn_topk(
     assert k >= 1, k
     on_tpu = jax.default_backend() == "tpu"
     if impl == "ref" or (impl == "auto" and not on_tpu and not interpret):
-        dist, idx = knn_topk_ref(x, k)
+        dist, idx = knn_topk_ref(x, k, queries=queries,
+                                 query_offset=query_offset)
     else:
         if interpret is None:
             interpret = not on_tpu
+        q = x if queries is None else queries
+        nq = q.shape[0]
         bk = min(block_k, _round_up(n, 128))
-        bq = min(block_q, bk)
-        assert bk % bq == 0, (bq, bk)  # padded n must tile both grid axes
-        n_p = _round_up(n, bk)
+        bq = min(block_q, _round_up(nq, 8))
+        nq_p = _round_up(nq, bq)
+        nc_p = _round_up(n, bk)
         d_p = _round_up(d, 128)
         k_pad = _round_up(k, 8)
 
-        xf = _pad_to(_pad_to(x.astype(jnp.float32), n_p, 0), d_p, 1)
+        xf = _pad_to(_pad_to(x.astype(jnp.float32), nc_p, 0), d_p, 1)
+        qf = _pad_to(_pad_to(q.astype(jnp.float32), nq_p, 0), d_p, 1)
         cn = (xf * xf).sum(1)
-        if n_p > n:  # padded candidates must never enter the top-k
+        if nc_p > n:  # padded candidates must never enter the top-k
             cn = cn.at[n:].set(jnp.inf)
-        raw, idx = knn_topk_pallas(xf, cn, k_pad, block_q=bq, block_k=bk,
-                                   interpret=interpret)
-        raw, idx = raw[:n, :k], idx[:n, :k]
-        qn = (x.astype(jnp.float32) ** 2).sum(1)
+        raw, idx = knn_topk_pallas(qf, xf, cn, k_pad,
+                                   query_offset=query_offset,
+                                   block_q=bq, block_k=bk, interpret=interpret)
+        raw, idx = raw[:nq, :k], idx[:nq, :k]
+        qn = (q.astype(jnp.float32) ** 2).sum(1)
         invalid = jnp.isinf(raw)
         dist = jnp.where(invalid, jnp.inf, jnp.maximum(raw + qn[:, None], 0.0))
         idx = jnp.where(invalid, -1, idx)

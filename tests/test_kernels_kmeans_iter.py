@@ -1,0 +1,174 @@
+"""Per-kernel validation: fused k-means *iteration* vs the materialized
+oracle — labels + min-dist + per-cluster sums/counts from one data stream.
+
+Both execution paths are exercised: the Pallas kernel under interpret=True
+(the kernel body runs in Python on CPU; TPU is the deployment target) and
+the chunked online ``lax.scan`` fallback (the production CPU/GPU path).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kmeans_iter.ops import ACC_VMEM_BUDGET_BYTES, kmeans_iter
+from repro.kernels.kmeans_iter.ref import kmeans_iter_ref
+
+
+def _check(n, k, d, dtype=jnp.float32, block_q=256, block_k=128, seed=0,
+           x=None, c=None):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype) if x is None else x
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype) if c is None else c
+    l_ref, d_ref, s_ref, n_ref = kmeans_iter_ref(x, c)
+    for impl, kw in (
+        ("pallas", dict(interpret=True, block_q=block_q, block_k=block_k)),
+        ("chunked", dict(block_q=block_q)),
+    ):
+        l_got, d_got, s_got, n_got = kmeans_iter(x, c, impl=impl, **kw)
+        # labels must match except at genuine distance ties
+        mism = np.asarray(l_got) != np.asarray(l_ref)
+        if mism.any():
+            np.testing.assert_allclose(
+                np.asarray(d_got)[mism], np.asarray(d_ref)[mism],
+                rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
+        # statistics must be consistent with the *returned* labels (ties may
+        # legitimately move a point's mass between tied clusters)
+        h = np.eye(k, dtype=np.float64)[np.asarray(l_got)]
+        xf = np.asarray(x, np.float64)
+        np.testing.assert_allclose(np.asarray(s_got), h.T @ xf,
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
+        np.testing.assert_allclose(np.asarray(n_got), h.sum(0),
+                                   rtol=1e-5, atol=1e-5, err_msg=impl)
+        if not mism.any():
+            np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref),
+                                       rtol=1e-4, atol=1e-4, err_msg=impl)
+            np.testing.assert_allclose(np.asarray(n_got), np.asarray(n_ref),
+                                       rtol=1e-5, atol=1e-5, err_msg=impl)
+
+
+@pytest.mark.parametrize(
+    "n,k,d",
+    [
+        (8, 2, 1),  # degenerate-small
+        (128, 16, 8),  # aligned
+        (1000, 37, 90),  # paper's DTI d=90, odd k
+        (513, 500, 33),  # large-k regime the paper targets, unaligned n
+        (257, 129, 257),  # everything unaligned
+    ],
+)
+def test_shapes_fp32(n, k, d):
+    _check(n, k, d)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 128), (64, 128), (256, 256), (512, 512)])
+def test_block_shape_sweep(block_q, block_k):
+    _check(640, 384, 48, block_q=block_q, block_k=block_k, seed=7)
+
+
+def test_duplicate_points_mass_conserved():
+    """Exact twins tie bitwise and resolve to the same (lowest) centroid —
+    the accumulated counts must still account for every point exactly once."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(40, 6)).astype(np.float32)
+    x = jnp.asarray(np.concatenate([base, base, base[:7]]))
+    c = jnp.asarray(rng.normal(size=(9, 6)), jnp.float32)
+    for impl, kw in (("pallas", dict(interpret=True, block_q=32, block_k=128)),
+                     ("chunked", dict(block_q=32))):
+        labels, _, sums, counts = kmeans_iter(x, c, impl=impl, **kw)
+        assert float(jnp.sum(counts)) == x.shape[0]
+        np.testing.assert_allclose(np.asarray(sums).sum(0),
+                                   np.asarray(x).sum(0), rtol=1e-4)
+        lab = np.asarray(labels)
+        np.testing.assert_array_equal(lab[:40], lab[40:80])  # twins agree
+
+
+def test_empty_clusters_report_zero():
+    """Clusters that win no points must come back with exactly zero count
+    and zero sums (the driver's keep-previous-centroid policy keys on it)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(50, 4)), jnp.float32)
+    far = jnp.full((3, 4), 1e4, jnp.float32)  # unreachable centroids
+    c = jnp.concatenate([jnp.asarray(rng.normal(size=(2, 4)), jnp.float32), far])
+    for impl, kw in (("pallas", dict(interpret=True, block_q=32, block_k=128)),
+                     ("chunked", dict(block_q=32))):
+        labels, _, sums, counts = kmeans_iter(x, c, impl=impl, **kw)
+        assert int(np.asarray(labels).max()) < 2
+        np.testing.assert_array_equal(np.asarray(counts[2:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(sums[2:]), 0.0)
+
+
+def test_padded_centroids_never_win():
+    """k not a multiple of block_k: the +inf-norm padding rows must not leak
+    into labels, sums, or counts."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)  # heavy padding to 128
+    labels, _, sums, counts = kmeans_iter(x, c, impl="pallas", interpret=True)
+    assert int(np.asarray(labels).max()) < 3
+    assert float(jnp.sum(counts)) == 64
+
+
+def test_chunked_is_the_cpu_auto_path():
+    """`auto` off-TPU must pick the chunked online path (never interpret-mode
+    Pallas, which is orders of magnitude too slow for production CPU use)."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("CPU/GPU dispatch test")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(37, 5)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+    got = kmeans_iter(x, c, impl="auto")
+    want = kmeans_iter(x, c, impl="chunked")
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_vmem_budget_guard():
+    """A resident accumulator beyond the VMEM budget must raise under
+    impl="pallas" and silently take the chunked path under "auto"."""
+    k = ACC_VMEM_BUDGET_BYTES // (128 * 4) + 128  # k_pad * d_aug * 4 > budget
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, 4)), jnp.float32)
+    with pytest.raises(NotImplementedError, match="VMEM budget"):
+        kmeans_iter(x, c, impl="pallas", interpret=True)
+    labels, dmin, sums, counts = kmeans_iter(x, c, impl="auto", interpret=True)
+    l_ref, *_ = kmeans_iter_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(l_ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(4, 300),
+    k=st.integers(2, 64),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_ref(n, k, d, seed):
+    _check(n, k, d, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 200), k=st.integers(2, 32), d=st.integers(1, 32),
+       seed=st.integers(0, 10**6))
+def test_property_stats_consistent_with_labels(n, k, d, seed):
+    """Invariant (both paths): counts sum to n, sums equal the label-grouped
+    row sums, and the reported dist² is attained by the reported label."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    for impl, kw in (("pallas", dict(interpret=True, block_q=64, block_k=128)),
+                     ("chunked", dict(block_q=64))):
+        labels, dist2, sums, counts = kmeans_iter(
+            jnp.asarray(x), jnp.asarray(c), impl=impl, **kw)
+        labels, dist2 = np.asarray(labels), np.asarray(dist2)
+        full = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(dist2, full.min(1), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(full[np.arange(n), labels], full.min(1),
+                                   rtol=1e-3, atol=1e-4)
+        assert float(np.asarray(counts).sum()) == n
+        h = np.eye(k, dtype=np.float64)[labels]
+        np.testing.assert_allclose(np.asarray(sums), h.T @ x.astype(np.float64),
+                                   rtol=1e-3, atol=1e-3)

@@ -107,3 +107,45 @@ def test_ref_query_block_offset():
     dist, idx = np.asarray(dist), np.asarray(idx)
     np.testing.assert_allclose(dist, full_d[off:64], rtol=1e-3, atol=1e-3)
     assert (idx != (np.arange(off, 64))[:, None]).all()
+
+
+@pytest.mark.parametrize("off,nq,bq,bk", [
+    (0, 32, 32, 32),    # leading block, exact tiling
+    (32, 32, 16, 64),   # interior block
+    (64, 34, 16, 32),   # trailing block, nq not a block multiple
+])
+def test_kernel_query_block_offset(off, nq, bq, bk):
+    """The Pallas kernel's self-exclusion mask under a global query-row
+    offset (the per-shard dispatch of the sharded Stage 1) — must match the
+    reference block-query path exactly, including neighbor ids."""
+    x = np.random.default_rng(9).normal(size=(98, 5)).astype(np.float32)
+    k = 4
+    q = jnp.asarray(x[off:off + nq])
+    d_ker, i_ker = knn_topk(jnp.asarray(x), k, queries=q, query_offset=off,
+                            impl="pallas", interpret=True, block_q=bq, block_k=bk)
+    d_ref, i_ref = knn_topk_ref(jnp.asarray(x), k, queries=q, query_offset=off)
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_ker), np.asarray(i_ref))
+    assert (np.asarray(i_ker) != (np.arange(off, off + nq))[:, None]).all()
+
+
+def test_kernel_offset_traced_under_jit():
+    """query_offset is traced (shard_map passes axis_index-derived values):
+    one compiled function must serve every block offset."""
+    import jax
+
+    x = np.random.default_rng(1).normal(size=(64, 4)).astype(np.float32)
+    k = 3
+    fn = jax.jit(lambda xs, q, o: knn_topk(xs, k, queries=q, query_offset=o,
+                                           impl="pallas", interpret=True,
+                                           block_q=16, block_k=32))
+    for off in (0, 16, 48):
+        got_d, got_i = fn(jnp.asarray(x), jnp.asarray(x[off:off + 16]),
+                          jnp.asarray(off))
+        ref_d, ref_i = knn_topk_ref(jnp.asarray(x), k,
+                                    queries=jnp.asarray(x[off:off + 16]),
+                                    query_offset=off)
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(ref_d),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))

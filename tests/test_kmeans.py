@@ -25,14 +25,60 @@ def _purity(pred, truth):
                for i in np.unique(pred)) / len(truth)
 
 
-@pytest.mark.parametrize("update", ["matmul", "segment"])
-def test_recovers_blobs(update):
+@pytest.mark.parametrize("mode", [("two_pass", "matmul"), ("two_pass", "segment"), ("fused", "matmul")])
+def test_recovers_blobs(mode):
+    it, update = mode
     X, truth, _ = _blobs(6, 300, 8)
-    res = jax.jit(lambda x, key: kmeans(x, KMeansConfig(k=6, update=update, assign="ref"), key))(
+    cfg = KMeansConfig(k=6, iter=it, update=update, assign="ref")
+    res = jax.jit(lambda x, key: kmeans(x, cfg, key))(
         jnp.asarray(X), jax.random.PRNGKey(0)
     )
     assert _purity(np.asarray(res.labels), truth) > 0.98
     assert int(res.shifted) == 0  # converged
+
+
+@pytest.mark.parametrize("n,k,d", [(200, 7, 5), (513, 37, 9), (130, 3, 17)])
+def test_fused_iteration_matches_two_pass_driver(n, k, d):
+    """Full-driver parity on non-multiple-of-block shapes: the one-pass
+    iteration must track assign_ref + update_centroids — identical labels
+    and iteration count, centroids to accumulation-order tolerance."""
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    r_fused = kmeans(x, KMeansConfig(k=k, iter="fused", max_iters=25), key)
+    r_two = kmeans(x, KMeansConfig(k=k, iter="two_pass", assign="ref", max_iters=25), key)
+    np.testing.assert_array_equal(np.asarray(r_fused.labels), np.asarray(r_two.labels))
+    assert int(r_fused.iterations) == int(r_two.iterations)
+    np.testing.assert_allclose(np.asarray(r_fused.centroids),
+                               np.asarray(r_two.centroids), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(r_fused.inertia), float(r_two.inertia),
+                               rtol=1e-5)
+
+
+def test_fused_driver_handles_duplicate_points():
+    """Many exact twins (tied distances everywhere) must not double-count
+    mass or diverge from the reference path."""
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=(30, 4)).astype(np.float32)
+    x = jnp.asarray(np.concatenate([base] * 4))
+    key = jax.random.PRNGKey(3)
+    r_fused = kmeans(x, KMeansConfig(k=5, iter="fused", max_iters=15), key)
+    r_two = kmeans(x, KMeansConfig(k=5, iter="two_pass", assign="ref", max_iters=15), key)
+    np.testing.assert_array_equal(np.asarray(r_fused.labels), np.asarray(r_two.labels))
+    lab = np.asarray(r_fused.labels)
+    np.testing.assert_array_equal(lab[:30], lab[90:])  # twins co-assigned
+
+
+def test_fused_empty_cluster_keeps_previous_centroid():
+    """Empty-cluster carryover through the fused driver: a centroid seeded
+    unreachably far keeps its position, two-pass-identically."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(40, 3)), jnp.float32)
+    init = jnp.concatenate([x[:2], jnp.full((1, 3), 50.0, jnp.float32)])
+    r = kmeans(x, KMeansConfig(k=3, iter="fused", max_iters=5),
+               jax.random.PRNGKey(0), init_centroids=init)
+    np.testing.assert_allclose(np.asarray(r.centroids[2]), 50.0)
+    assert int(np.asarray(r.labels).max()) < 2
 
 
 def test_update_variants_agree():
@@ -50,6 +96,36 @@ def test_empty_cluster_keeps_previous_centroid():
     prev = jnp.full((3, 3), 7.0)
     c = update_centroids(X, labels, 3, prev)
     np.testing.assert_allclose(np.asarray(c[1:]), 7.0)
+
+
+def test_config_rejects_unknown_engine():
+    """A typo'd engine/init name must fail loudly at construction, not
+    silently select the other code path."""
+    with pytest.raises(ValueError, match="iter"):
+        KMeansConfig(k=3, iter="one_pass")
+    with pytest.raises(ValueError, match="init"):
+        KMeansConfig(k=3, init="k-means++")
+    import repro.core.distributed_pipeline as dp
+    with pytest.raises(ValueError, match="fused"):
+        dp.kmeans_sharded(jnp.zeros((8, 2)), KMeansConfig(k=2, iter="two_pass"),
+                          jax.random.PRNGKey(0), mesh=None)
+
+
+def test_interpret_plumbs_through_driver():
+    """KMeansConfig.interpret must reach the Pallas wrappers so the kernel
+    bodies run (interpret mode) off-TPU without monkeypatching backend
+    detection — both the fused iteration and the two-pass assign."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(48, 6)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    want = kmeans(x, KMeansConfig(k=4, iter="two_pass", assign="ref", max_iters=8), key)
+    for cfg in (KMeansConfig(k=4, iter="fused", interpret=True, max_iters=8, block_q=16, block_k=128),
+                KMeansConfig(k=4, iter="two_pass", assign="fused", interpret=True,
+                             max_iters=8, block_q=16, block_k=128)):
+        got = kmeans(x, cfg, key)
+        np.testing.assert_array_equal(np.asarray(got.labels), np.asarray(want.labels))
+        np.testing.assert_allclose(np.asarray(got.centroids),
+                                   np.asarray(want.centroids), rtol=1e-4, atol=1e-4)
 
 
 def test_kmeanspp_spreads_seeds():
@@ -78,7 +154,7 @@ def test_assign_auto_propagates_real_kernel_bugs(monkeypatch):
 
     x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 4)), jnp.float32)
     c = x[:3]
-    cfg = KMeansConfig(k=3, assign="auto")
+    cfg = KMeansConfig(k=3, iter="two_pass", assign="auto")
 
     def broken(*a, **kw):
         raise ValueError("kernel bug")
@@ -91,7 +167,7 @@ def test_assign_auto_propagates_real_kernel_bugs(monkeypatch):
         raise NotImplementedError("no TPU")
 
     monkeypatch.setattr(ops_mod, "kmeans_assign", unavailable)
-    monkeypatch.setattr(km_mod, "_fallback_warned", False)
+    km_mod.reset_fallback_warnings()
     with pytest.warns(RuntimeWarning, match="falling back"):
         labels, dmin = km_mod._assign(x, c, None, cfg)
     want_labels, want_dmin = assign_ref(x, c)
@@ -103,7 +179,25 @@ def test_assign_auto_propagates_real_kernel_bugs(monkeypatch):
         km_mod._assign(x, c, None, cfg)
     # assign="fused" re-raises even unavailability
     with pytest.raises(NotImplementedError):
-        km_mod._assign(x, c, None, KMeansConfig(k=3, assign="fused"))
+        km_mod._assign(x, c, None, KMeansConfig(k=3, iter="two_pass", assign="fused"))
+
+
+def test_fallback_warn_state_is_resettable():
+    """The warn-once registry must not leak across tests: after the reset
+    hook, the next fallback warns again (the old module-global bool made
+    warn-order test-suite-dependent)."""
+    from repro.core.kmeans import reset_fallback_warnings, _warn_fallback_once
+
+    reset_fallback_warnings()
+    with pytest.warns(RuntimeWarning, match="first"):
+        _warn_fallback_once("k", "first")
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        _warn_fallback_once("k", "suppressed repeat")  # warn-once: silent
+    reset_fallback_warnings()
+    with pytest.warns(RuntimeWarning, match="first"):
+        _warn_fallback_once("k", "first again")
 
 
 @settings(max_examples=10, deadline=None)
