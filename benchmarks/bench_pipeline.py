@@ -1,12 +1,23 @@
 """Paper Fig. 3-6 — end-to-end spectral clustering on the four dataset
-shapes (CPU-scaled; full-shape costs are dry-run territory, §Roofline)."""
+shapes (CPU-scaled; full-shape costs are dry-run territory, §Roofline).
+
+Runs through the stage-graph API and reports *per-stage* wall time —
+prepare (graph normalize), embed (Lanczos), cluster (k-means) — plus the
+fused end-to-end ``run``, the same decomposition as the paper's Table III.
+Emits BENCH_pipeline.json alongside the CSV rows.
+
+    PYTHONPATH=src:. python benchmarks/bench_pipeline.py [--smoke]
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax
 
-from benchmarks.common import emit, time_fn
-from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from benchmarks.common import emit, purity, time_fn
+from repro.core.spectral import KMeansConfig, SpectralPipeline
 from repro.data.sbm import sbm_graph
 
 
@@ -17,20 +28,70 @@ DATASETS = {
     "dblp_like": (80, 100, 0.4, 0.0005),
 }
 
+SMOKE_DATASETS = {
+    "fb_like": (60, 8, 0.15, 0.01),
+    "syn200_like": (30, 12, 0.3, 0.01),
+}
+
 
 def main() -> None:
-    for name, (n_per, r, p, q) in DATASETS.items():
-        coo, truth = sbm_graph(n_per, r, p, q, seed=7)
-        cfg = SpectralClusteringConfig(n_clusters=r, kmeans_assign="ref")
-        fn = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))
-        us = time_fn(fn, coo, jax.random.PRNGKey(0), iters=2)
-        out = fn(coo, jax.random.PRNGKey(0))
-        lab = np.asarray(out.labels)
-        from collections import Counter
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized shapes")
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+    datasets = SMOKE_DATASETS if args.smoke else DATASETS
 
-        pur = sum(Counter(truth[lab == i]).most_common(1)[0][1] for i in np.unique(lab)) / len(truth)
-        emit(f"pipeline/{name}_n{coo.shape[0]}_k{r}", us,
-             f"purity={pur:.3f};restarts={int(out.lanczos_restarts)}")
+    records = []
+    for name, (n_per, r, p, q) in datasets.items():
+        coo, truth = sbm_graph(n_per, r, p, q, seed=7)
+        pipe = SpectralPipeline(n_clusters=r, kmeans=KMeansConfig(assign="ref"))
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+
+        prepare = jax.jit(pipe.prepare)
+        embed = jax.jit(pipe.embed)
+        cluster = jax.jit(pipe.cluster)
+        run = jax.jit(lambda w, key: pipe.run(w, key))
+
+        us_prepare = time_fn(prepare, coo, iters=args.iters)
+        state = prepare(coo)
+        us_embed = time_fn(embed, state, k1, iters=args.iters)
+        emb = embed(state, k1)
+        us_cluster = time_fn(cluster, emb, k2, iters=args.iters)
+        us_total = time_fn(run, coo, key, iters=args.iters)
+
+        out = run(coo, key)
+        pur = purity(np.asarray(out.labels), truth)
+        tag = f"pipeline/{name}_n{coo.shape[0]}_k{r}"
+        emit(f"{tag}/prepare", us_prepare)
+        emit(f"{tag}/embed", us_embed, f"restarts={int(out.lanczos_restarts)}")
+        emit(f"{tag}/cluster", us_cluster, f"iters={int(out.kmeans_iterations)}")
+        emit(f"{tag}/total", us_total, f"purity={pur:.3f}")
+        records.append({
+            "dataset": name,
+            "n": coo.shape[0],
+            "k": r,
+            "nnz": coo.nnz,
+            "us_prepare": round(us_prepare, 1),
+            "us_embed": round(us_embed, 1),
+            "us_cluster": round(us_cluster, 1),
+            "us_total": round(us_total, 1),
+            "purity": round(pur, 4),
+            "lanczos_restarts": int(out.lanczos_restarts),
+            "kmeans_iterations": int(out.kmeans_iterations),
+        })
+
+    payload = {
+        "bench": "pipeline",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "config_example": SpectralPipeline(
+            n_clusters=8, kmeans=KMeansConfig(assign="ref")).to_dict(),
+        "records": records,
+    }
+    with open("BENCH_pipeline.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote BENCH_pipeline.json ({len(records)} records)")
 
 
 if __name__ == "__main__":

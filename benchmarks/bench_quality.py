@@ -2,11 +2,10 @@
 (The paper reports timings only; this guards our reproduction's outputs.)"""
 from __future__ import annotations
 
-import numpy as np
 import jax
 
-from benchmarks.common import emit, time_fn
-from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from benchmarks.common import emit, purity
+from repro.core.spectral import SpectralPipeline
 from repro.data.sbm import sbm_graph
 
 
@@ -14,13 +13,9 @@ def main() -> None:
     rng_cases = [(4, 200, 0.25, 0.01), (8, 120, 0.3, 0.01), (16, 60, 0.4, 0.005)]
     for r, n_per, p, q in rng_cases:
         coo, truth = sbm_graph(n_per, r, p, q, seed=r)
-        out = jax.jit(lambda w, key: spectral_cluster(
-            w, SpectralClusteringConfig(n_clusters=r), key))(coo, jax.random.PRNGKey(0))
-        lab = np.asarray(out.labels)
-        from collections import Counter
-
-        pur = sum(Counter(truth[lab == i]).most_common(1)[0][1] for i in np.unique(lab)) / len(truth)
-        emit(f"quality/sbm_r{r}", 0.0, f"purity={pur:.3f}")
+        pipe = SpectralPipeline(n_clusters=r)
+        out = jax.jit(lambda w, key: pipe.run(w, key))(coo, jax.random.PRNGKey(0))
+        emit(f"quality/sbm_r{r}", 0.0, f"purity={purity(out.labels, truth):.3f}")
 
 
 if __name__ == "__main__":

@@ -28,3 +28,15 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def purity(labels, truth) -> float:
+    """Majority-vote cluster purity vs a planted partition."""
+    from collections import Counter
+
+    import numpy as np
+
+    labels = np.asarray(labels)
+    truth = np.asarray(truth)
+    return sum(Counter(truth[labels == i]).most_common(1)[0][1]
+               for i in np.unique(labels)) / len(truth)

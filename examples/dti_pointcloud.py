@@ -13,7 +13,8 @@ the same decomposition as the paper's Table III.
 ``--device-stage1`` swaps the host ε-edge construction for the device-
 resident fused path: spatial kNN via the ``knn_topk`` kernel + profile
 cross-correlation weights, points→labels under a single jit
-(``spectral_cluster_from_points``).
+(``SpectralPipeline.run`` on raw points, with ``GraphConfig.knn_k`` and a
+separate ``points=`` search space).
 """
 import argparse
 import time
@@ -21,11 +22,7 @@ import time
 import numpy as np
 import jax
 
-from repro.core.pipeline import (
-    SpectralClusteringConfig,
-    spectral_cluster,
-    spectral_cluster_from_points,
-)
+from repro.core.spectral import EigConfig, GraphConfig, KMeansConfig, SpectralPipeline
 from repro.core.similarity import build_similarity_graph
 from repro.data.pointcloud import dti_like_pointcloud
 
@@ -54,14 +51,17 @@ def main() -> None:
     print(f"[data] {len(pos)} voxels, {len(edges)} ε-pairs "
           f"({time.perf_counter()-t0:.2f}s)")
 
-    cfg = SpectralClusteringConfig(n_clusters=k, lanczos_tol=1e-4,
-                                   kmeans_iter=args.kmeans_iter)
+    pipe = SpectralPipeline(
+        n_clusters=k,
+        graph=GraphConfig(knn_k=args.knn, measure="cross_correlation"),
+        eig=EigConfig(tol=1e-4),
+        kmeans=KMeansConfig(iter=args.kmeans_iter),
+    )
     if args.device_stage1:
         import jax.numpy as jnp
 
         t0 = time.perf_counter()
-        out = jax.jit(lambda x, p, key: spectral_cluster_from_points(
-            x, cfg, key, knn_k=args.knn, points=p, measure="cross_correlation"))(
+        out = jax.jit(lambda x, p, key: pipe.run(x, key, points=p))(
             jnp.asarray(profiles), jnp.asarray(pos), jax.random.PRNGKey(0))
         jax.block_until_ready(out.labels)
         t_solve = time.perf_counter() - t0
@@ -75,7 +75,7 @@ def main() -> None:
         print(f"[stage 1] similarity graph: nnz={w.nnz} ({t_sim:.3f}s)")
 
         t0 = time.perf_counter()
-        out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(w, jax.random.PRNGKey(0))
+        out = jax.jit(lambda w, key: pipe.run(w, key))(w, jax.random.PRNGKey(0))
         jax.block_until_ready(out.labels)
         t_solve = time.perf_counter() - t0
         print(f"[stages 2+3] eigensolver+kmeans: {t_solve:.3f}s "

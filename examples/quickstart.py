@@ -2,16 +2,26 @@
 
     PYTHONPATH=src python examples/quickstart.py [--clusters 8] [--n-per 200]
 
-Generates an SBM graph (the paper's Syn200 family), runs the full pipeline
-(normalized Laplacian → restarted Lanczos → k-means++), and reports purity.
+Generates an SBM graph (the paper's Syn200 family) and runs the full
+pipeline (normalized Laplacian → restarted Lanczos → k-means++) through the
+stage-graph API: one ``SpectralPipeline`` object, stages independently
+runnable — the example re-clusters the cached spectral embedding at 2×k
+without re-entering the eigensolver.
 """
 import argparse
 
 import numpy as np
 import jax
 
-from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+from repro.core.spectral import EigConfig, SpectralPipeline
 from repro.data.sbm import sbm_graph
+
+
+def purity(labels, truth) -> float:
+    from collections import Counter
+
+    return sum(Counter(truth[labels == i]).most_common(1)[0][1]
+               for i in np.unique(labels)) / len(truth)
 
 
 def main() -> None:
@@ -28,20 +38,26 @@ def main() -> None:
     coo, truth = sbm_graph(args.n_per, args.clusters, args.p_in, args.p_out, seed=args.seed)
     print(f"graph: {coo.shape[0]} nodes, {coo.nnz} directed edges")
 
-    cfg = SpectralClusteringConfig(n_clusters=args.clusters,
-                                   lanczos_block_size=args.block_size)
-    out = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))(coo, jax.random.PRNGKey(args.seed))
+    pipe = SpectralPipeline(n_clusters=args.clusters,
+                            eig=EigConfig(block_size=args.block_size))
+    out = jax.jit(lambda w, key: pipe.run(w, key))(coo, jax.random.PRNGKey(args.seed))
 
     labels = np.asarray(out.labels)
-    from collections import Counter
-
-    purity = sum(Counter(truth[labels == i]).most_common(1)[0][1]
-                 for i in np.unique(labels)) / len(truth)
     ev = np.asarray(out.eigenvalues)
     print(f"Lanczos restarts: {int(out.lanczos_restarts)}  "
           f"k-means iterations: {int(out.kmeans_iterations)}")
     print(f"smallest Laplacian eigenvalues: {np.round(ev[:min(10, len(ev))], 4)}")
-    print(f"purity vs planted partition: {purity:.3f}")
+    print(f"purity vs planted partition: {purity(labels, truth):.3f}")
+
+    # stage resumability: reuse the cached embedding at a different k —
+    # Stage 3 only, no second Lanczos solve
+    state = jax.jit(pipe.prepare)(coo)
+    emb = jax.jit(pipe.embed)(state, jax.random.PRNGKey(args.seed))
+    out2 = jax.jit(lambda e, key: pipe.cluster(e, key, n_clusters=2 * args.clusters))(
+        emb, jax.random.PRNGKey(args.seed + 1))
+    print(f"re-clustered cached embedding at k={2 * args.clusters}: "
+          f"{len(np.unique(np.asarray(out2.labels)))} non-empty clusters "
+          f"(no extra restarts: {int(out2.lanczos_restarts)} == {int(emb.restarts)})")
 
 
 if __name__ == "__main__":

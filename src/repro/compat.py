@@ -17,3 +17,26 @@ except AttributeError:  # pragma: no cover - version-dependent
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
     SHARD_MAP_NO_CHECK = {"check_rep": False}
+
+
+def _version_tuple(version: str) -> tuple:
+    parts = []
+    for p in version.split(".")[:3]:
+        digits = "".join(c for c in p if c.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)
+
+
+def needs_argsort_gather_workaround(version: str | None = None) -> bool:
+    """True while the pinned jax still miscompiles argsort-gather on
+    partially-replicated operands (psum-doubling across unmentioned mesh
+    axes; observed on 0.4.x CPU).  Gates the Stage-1 re-replication
+    workaround in :mod:`repro.core.spectral` — see the ROADMAP item
+    "Revisit the GSPMD argsort-gather miscompile": once the pin moves to
+    jax >= 0.5 this returns False and the extra all-gather disappears
+    automatically.
+    """
+    v = _version_tuple(jax.__version__ if version is None else version)
+    return v < (0, 5)

@@ -320,8 +320,8 @@ def _recsys_cell(arch: ArchDef, sspec: ShapeSpec, rules) -> Cell:
 def spectral_cell(arch: ArchDef, sspec: ShapeSpec, rules, *, mesh=None,
                   variant: str = "gspmd", gather_dtype=None,
                   data_axes=("pod", "data")) -> Cell:
-    from repro.core.distributed_pipeline import spectral_cluster_sharded
     from repro.core.pipeline import SpectralClusteringConfig
+    from repro.core.spectral import Plan
     from repro.sparse.distributed import ShardedCOO
 
     name = f"{arch.name}/{sspec.name}" + ("" if variant == "gspmd" else f"[{variant}]")
@@ -356,11 +356,11 @@ def spectral_cell(arch: ArchDef, sspec: ShapeSpec, rules, *, mesh=None,
     )
     axis = tuple(a for a in data_axes if mesh is None or a in mesh.axis_names)
 
+    pipe = scfg.to_pipeline(plan=Plan(device="sharded", mesh=mesh, axis=axis,
+                                      variant=variant, gather_dtype=gather_dtype))
+
     def fn(sm_in, key):
-        out = spectral_cluster_sharded(
-            sm_in, scfg, key, variant=variant, mesh=mesh, axis=axis,
-            gather_dtype=gather_dtype,
-        )
+        out = pipe.run(sm_in, key)
         return out.labels, out.eigenvalues, out.kmeans_inertia
 
     key = _sds((2,), jnp.uint32)
@@ -426,9 +426,9 @@ def spectral_component_cells(arch: ArchDef, shape_name: str, rules, *, mesh=None
                              variant: str = "gspmd", gather_dtype=None,
                              data_axes=("pod", "data")):
     """Per-stage cells + trip counts: [(label, Cell, trip_count)]."""
-    from repro.core.distributed_pipeline import normalize_sharded
     from repro.core.kmeans import assign_ref, update_centroids
-    from repro.sparse.distributed import ShardedCOO, make_sharded_spmv, spmv_gspmd
+    from repro.core.operator import ShardedCooOperator
+    from repro.sparse.distributed import ShardedCOO
 
     sspec = arch.shapes[shape_name]
     d = sspec.dims
@@ -455,15 +455,13 @@ def spectral_component_cells(arch: ArchDef, shape_name: str, rules, *, mesh=None
     hspec = shd.resolve(("nodes", None), rules)
     axis = tuple(a for a in data_axes if mesh is None or a in mesh.axis_names)
 
-    def matvec_of(sm_in):
-        if variant == "shard_map":
-            inner = make_sharded_spmv(mesh, sm_in, axis=axis, gather_dtype=gather_dtype)
-            return lambda x: inner(sm_in.row_local, sm_in.col, sm_in.val, x)
-        return lambda x: spmv_gspmd(sm_in, x)
+    def operator_of(sm_in):
+        return ShardedCooOperator(sm_in, variant=variant, mesh=mesh, axis=axis,
+                                  gather_dtype=gather_dtype)
 
-    # (a) one Lanczos step: matvec + coefficient + two-pass reorth
+    # (a) one Lanczos step: operator application + coefficient + two-pass reorth
     def lanczos_step(sm_in, V, v):
-        w = matvec_of(sm_in)(v)
+        w = operator_of(sm_in).mv(v)
         c = V @ w
         w = w - V.T @ c
         c2 = V @ w

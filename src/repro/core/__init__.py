@@ -10,10 +10,27 @@ NOTE: ``repro.core.kmeans`` (module) contains ``kmeans`` (function) — we do
 NOT re-export the function here, to avoid shadowing the submodule.
 """
 
-from repro.core.pipeline import (  # noqa: F401
+from repro.core.spectral import (  # noqa: F401
+    EigConfig,
+    EmbedState,
+    GraphConfig,
+    GraphState,
+    KMeansConfig,
+    Plan,
+    SpectralPipeline,
+    SpectralResult,
+)
+from repro.core.operator import (  # noqa: F401
+    BlockEllOperator,
+    CallableOperator,
+    CooOperator,
+    LinearOperator,
+    ShardedCooOperator,
+)
+from repro.core.pipeline import (  # noqa: F401  (deprecated shims)
     SpectralClusteringConfig,
     spectral_cluster,
     spectral_cluster_from_points,
 )
-from repro.core.lanczos import lanczos_topk  # noqa: F401
+from repro.core.lanczos import eigsh, lanczos_topk  # noqa: F401
 from repro.core.kmeans import kmeanspp_init  # noqa: F401

@@ -1,32 +1,23 @@
-"""Pod-scale spectral clustering on a row-partitioned graph.
+"""Pod-scale sharded building blocks + deprecated ``_sharded`` entry shims.
 
-The distributed variant of :func:`repro.core.pipeline.spectral_cluster`:
-consumes a :class:`repro.sparse.distributed.ShardedCOO` (edges bucketed by
-destination row block) and runs Stage 2+3 with one of two matvec engines:
+What lives here now:
 
-* ``variant="gspmd"``     — paper-faithful baseline: segment_sum over global
-  row ids under jit; GSPMD inserts the collectives (it proves nothing about
-  scatter locality, so the full n-vector is all-reduced per matvec);
-* ``variant="shard_map"`` — locality-exploiting: the explicit shard_map SpMV
-  from repro.sparse.distributed (all-gather of x only — the ICI analogue of
-  the paper's one-PCIe-transfer-per-iteration design);
-  ``gather_dtype=bf16`` halves those ICI bytes (§Perf knob).
+* :func:`make_knn_rowblock` — row-block-sharded Stage-1 neighbor search;
+* :func:`kmeans_sharded` — explicit-collective Stage 3 (one packed psum per
+  Lloyd iteration);
+* deprecated shims :func:`spectral_cluster_sharded` /
+  :func:`spectral_cluster_from_points_sharded`, now thin wrappers that build
+  a ``Plan(device="sharded", ...)`` and dispatch through
+  :class:`repro.core.spectral.SpectralPipeline` — the parallel ``_sharded``
+  code paths collapsed into plan dispatch.
 
-With ``cfg.lanczos_block_size = b > 1`` the eigensolver runs in block mode:
-the shard_map engine all-gathers one [n, b] block per operator application
-instead of b single vectors — collective count drops b× along with the
-nnz-stream amortization (DESIGN.md §3-4).
-
-Everything else (Lanczos, k-means) is mesh-agnostic jnp whose collectives
-GSPMD derives from the sharded operands.
-
-Stage 1 has a sharded variant too: :func:`spectral_cluster_from_points_sharded`
-row-partitions the O(n²d) kNN search over the mesh (``make_knn_rowblock``)
-before handing the assembled graph to the plain jit pipeline.
+The sharded *operator* itself (gspmd / shard_map SpMV+SpMM engines behind
+one protocol) is :class:`repro.core.operator.ShardedCooOperator`; the
+normalization helper moved to :func:`repro.sparse.distributed.normalize_sharded`
+(re-exported here for compatibility).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import Optional
@@ -36,23 +27,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 import repro.core.kmeans as km
-import repro.core.lanczos as lz
 from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
-from repro.core.pipeline import (
-    SpectralClusteringConfig,
-    SpectralResult,
-    default_basis_size,
-    spectral_cluster,
-)
-import repro.core.laplacian as lap
-from repro.core.similarity import graph_from_knn
+from repro.core.pipeline import SpectralClusteringConfig
+from repro.core.spectral import GraphConfig, Plan, SpectralResult
 from repro.kernels.knn_topk.ops import knn_topk
-from repro.sparse.distributed import (
+from repro.sparse.distributed import (  # noqa: F401  (normalize_sharded re-export)
     ShardedCOO,
-    make_sharded_spmm,
-    make_sharded_spmv,
-    spmm_gspmd,
-    spmv_gspmd,
+    normalize_sharded,
 )
 
 Array = jax.Array
@@ -64,19 +45,6 @@ def _axis_tuple(axis) -> tuple:
 
 def _axis_size(mesh, axis) -> int:
     return math.prod(mesh.shape[a] for a in _axis_tuple(axis))
-
-
-def _global_rows(sm: ShardedCOO) -> Array:
-    shard = jnp.arange(sm.num_shards, dtype=jnp.int32).repeat(sm.edges_per_shard)
-    return sm.row_local + shard * sm.rows_per_shard
-
-
-def normalize_sharded(sm: ShardedCOO, deg: Array) -> ShardedCOO:
-    """val ← val · d^{-1/2}[row] · d^{-1/2}[col]  (sym normalization)."""
-    isd = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
-    grow = _global_rows(sm)
-    val = sm.val * isd[grow] * isd[sm.col]
-    return dataclasses.replace(sm, val=val)
 
 
 def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
@@ -129,29 +97,26 @@ def spectral_cluster_from_points_sharded(
     sigma: float = 1.0,
     knn_eps: Array | float | None = None,
 ) -> SpectralResult:
-    """Points in, labels out with a row-block-sharded Stage 1.
+    """Deprecated: ``SpectralPipeline(..., plan=Plan(device="sharded",
+    mesh=mesh)).run(x, key)``.
 
     The O(n²d) neighbor search — the dominant Stage-1 cost — runs shard_map
     row-parallel over ``axis``; graph assembly and Stages 2-3 are the plain
     jit pipeline, whose collectives GSPMD derives from the sharded operands.
     ``x.shape[0]`` must divide evenly by the mesh axis size.
     """
-    from jax.sharding import NamedSharding
+    import warnings
 
-    n = x.shape[0]
-    n_shards = mesh.shape[axis]
-    assert n % n_shards == 0, (n, n_shards)
-    dist2, idx = make_knn_rowblock(mesh, knn_k, axis=axis)(x)
-    # Re-replicate the small [n, k] search results before graph assembly: the
-    # O(n²d) work was the sharded part; assembly is O(nk) and the argsort
-    # gather miscompiles under GSPMD on operands left partially replicated
-    # over the unmentioned mesh axes (observed on jax 0.4.x CPU: gathered
-    # values get psum-doubled across the model axis).
-    rep = NamedSharding(mesh, P())
-    dist2 = jax.lax.with_sharding_constraint(dist2, rep)
-    idx = jax.lax.with_sharding_constraint(idx, rep)
-    w = graph_from_knn(x, dist2, idx, measure=measure, sigma=sigma, eps=knn_eps)
-    return spectral_cluster(w, cfg, key)
+    warnings.warn(
+        "spectral_cluster_from_points_sharded is deprecated; use "
+        "SpectralPipeline with Plan(device='sharded', mesh=...) "
+        "(repro.core.spectral)", DeprecationWarning, stacklevel=2)
+    pipe = cfg.to_pipeline(
+        graph=GraphConfig(knn_k=knn_k, measure=measure, sigma=sigma,
+                          eps=knn_eps),
+        plan=Plan(device="sharded", mesh=mesh, axis=axis),
+    )
+    return pipe.run(x, key)
 
 
 def kmeans_sharded(
@@ -185,6 +150,9 @@ def kmeans_sharded(
             "kmeans_sharded runs the fused one-pass engine only (the "
             "two-pass modes stay on the GSPMD formulation via km.kmeans); "
             f"got KMeansConfig.iter={cfg.iter!r}")
+    if cfg.k is None:
+        raise ValueError("KMeansConfig.k is unset — standalone kmeans_sharded "
+                         "needs an explicit k (use cfg.resolved(k))")
     axes = _axis_tuple(axis)
     n, d = x.shape
     k = cfg.k
@@ -262,64 +230,26 @@ def spectral_cluster_sharded(
     axis="data",
     gather_dtype=None,
 ) -> SpectralResult:
-    n = sm.shape[0]
-    k = cfg.n_eigvecs or cfg.n_clusters
+    """Deprecated: ``cfg.to_pipeline(plan=Plan(device="sharded", mesh=mesh,
+    variant=variant, ...)).run(sm, key)``.
 
-    ones = jnp.ones((n,), jnp.float32)
-    deg = spmv_gspmd(sm, ones)  # degree pass (cheap, once)
-    smn = normalize_sharded(sm, deg)
+    Stage 2 runs over the row-partitioned edges with the
+    :class:`~repro.core.operator.ShardedCooOperator` engine selected by
+    ``variant`` ("gspmd" baseline | "shard_map" explicit collectives); the
+    shard_map plan also gets the one-psum-per-iteration Stage 3.
 
-    if variant == "shard_map":
-        assert mesh is not None, "shard_map variant needs the mesh"
-        inner = make_sharded_spmv(mesh, smn, axis=axis, gather_dtype=gather_dtype)
-        inner_mm = make_sharded_spmm(mesh, smn, axis=axis, gather_dtype=gather_dtype)
+    Behavior note: ``cfg.drop_first=True`` now works here — the pre-PR-4
+    implementation silently ignored it on the sharded path; the unified
+    pipeline applies the same trivial-eigenvector bookkeeping as the
+    single-device path (an intentional fix, not a regression).  All other
+    configs are bitwise-identical to the old implementation.
+    """
+    import warnings
 
-        def matvec(x):
-            return inner(smn.row_local, smn.col, smn.val, x)
-
-        def matmat(X):  # one all-gather moves the whole [n, b] block
-            return inner_mm(smn.row_local, smn.col, smn.val, X)
-
-    else:
-
-        def matvec(x):
-            return spmv_gspmd(smn, x)
-
-        def matmat(X):
-            return spmm_gspmd(smn, X)
-
-    b = cfg.lanczos_block_size
-    m = cfg.lanczos_m or default_basis_size(n, k, b)
-    lcfg = lz.LanczosConfig(
-        k=k, m=m, max_restarts=cfg.lanczos_max_restarts, tol=cfg.lanczos_tol,
-        which="LA", fixed_restarts=cfg.fixed_restarts, block_size=b,
-    )
-    key, k_eig, k_km = jax.random.split(key, 3)
-    v0 = jnp.sqrt(jnp.maximum(deg, 0.0)) + 1e-3
-    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig, matmat=matmat)
-
-    isd = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
-    h = lap.embed_rows(eig.eigenvectors, isd)
-
-    kcfg = km.KMeansConfig(
-        k=cfg.n_clusters, max_iters=cfg.kmeans_max_iters, iter=cfg.kmeans_iter,
-        update=cfg.kmeans_update, assign=cfg.kmeans_assign,
-        fixed_iters=cfg.fixed_kmeans_iters,
-    )
-    # Stage 3: the shard_map variant gets the explicit one-psum-per-iteration
-    # Lloyd loop (fused iteration only — the two-pass mode stays on the GSPMD
-    # formulation, as do row counts that don't tile the mesh axis).
-    if (variant == "shard_map" and kcfg.iter == "fused" and mesh is not None
-            and n % _axis_size(mesh, axis) == 0):
-        res = kmeans_sharded(h, kcfg, k_km, mesh=mesh, axis=axis)
-    else:
-        res = km.kmeans(h, kcfg, k_km)
-    return SpectralResult(
-        labels=res.labels,
-        embedding=h,
-        eigenvalues=1.0 - eig.eigenvalues,
-        eig_residuals=eig.residuals,
-        kmeans_inertia=res.inertia,
-        lanczos_restarts=eig.restarts,
-        kmeans_iterations=res.iterations,
-    )
+    warnings.warn(
+        "spectral_cluster_sharded is deprecated; use SpectralPipeline with "
+        "Plan(device='sharded', variant=..., mesh=...) (repro.core.spectral)",
+        DeprecationWarning, stacklevel=2)
+    plan = Plan(device="sharded", mesh=mesh, axis=axis, variant=variant,
+                gather_dtype=gather_dtype)
+    return cfg.to_pipeline(plan=plan).run(sm, key)

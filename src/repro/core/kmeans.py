@@ -53,7 +53,10 @@ class KMeansResult(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class KMeansConfig:
-    k: int
+    # ``k=None`` is allowed only as a pipeline-stage config: the
+    # SpectralPipeline fills it from ``n_clusters`` at dispatch.  Standalone
+    # ``kmeans``/``kmeans_sharded`` calls require an explicit k.
+    k: Optional[int] = None
     max_iters: int = 100
     tol_changes: int = 0  # stop when <= this many labels change
     init: str = "kmeans++"  # "kmeans++" | "random"
@@ -74,6 +77,19 @@ class KMeansConfig:
         if self.init not in ("kmeans++", "random"):
             raise ValueError(f"KMeansConfig.init must be 'kmeans++' or "
                              f"'random', got {self.init!r}")
+        if self.update not in ("matmul", "segment"):
+            raise ValueError(f"KMeansConfig.update must be 'matmul' (MXU "
+                             f"one-hot) or 'segment' (VPU scatter-add), "
+                             f"got {self.update!r}")
+        if self.assign not in ("auto", "ref", "fused"):
+            raise ValueError(f"KMeansConfig.assign must be one of 'auto', "
+                             f"'ref', 'fused', got {self.assign!r}")
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"KMeansConfig.k must be >= 1, got {self.k}")
+
+    def resolved(self, k: int) -> "KMeansConfig":
+        """This config with ``k`` filled in (pipeline-stage dispatch)."""
+        return self if self.k == k else dataclasses.replace(self, k=k)
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +257,10 @@ def seed_centroids(x: Array, cfg: KMeansConfig, key: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 def kmeans(x: Array, cfg: KMeansConfig, key: Array, *, init_centroids: Optional[Array] = None) -> KMeansResult:
+    if cfg.k is None:
+        raise ValueError("KMeansConfig.k is unset — standalone kmeans() needs "
+                         "an explicit k (the SpectralPipeline fills it from "
+                         "n_clusters; use cfg.resolved(k))")
     n, d = x.shape
     k = cfg.k
     xf32 = x.astype(jnp.float32)

@@ -125,6 +125,23 @@ def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
     return r / jnp.maximum(jnp.linalg.norm(r), 1e-30)
 
 
+def eigsh(op, cfg: LanczosConfig, *, v0: Optional[Array] = None,
+          key: Optional[Array] = None) -> LanczosResult:
+    """Top-k eigenpairs of a symmetric :class:`~repro.core.operator.LinearOperator`.
+
+    This is the operator-protocol entry point (the jax-native ARPACK
+    ``dsaupd`` analogue): the solver only ever calls ``op.mv`` ([n] → [n])
+    or, with ``cfg.block_size > 1``, ``op.mm`` ([n, b] → [n, b]) — any
+    implementation (COO segment-sum, BlockELL Pallas SpMM, shard_map pod
+    SpMV, a bare-closure :class:`~repro.core.operator.CallableOperator`)
+    plugs in unchanged.
+    """
+    n = op.shape[0]
+    if cfg.block_size > 1:
+        return _lanczos_topk_block(op.mm, n, cfg, v0=v0, key=key)
+    return _lanczos_topk_single(op.mv, n, cfg, v0=v0, key=key)
+
+
 def lanczos_topk(
     matvec: Optional[Callable[[Array], Array]],
     n: int,
@@ -136,18 +153,29 @@ def lanczos_topk(
 ) -> LanczosResult:
     """Top-k eigenpairs of the symmetric operator behind ``matvec``/``matmat``.
 
-    ``matvec`` must map an ``[n]`` vector to an ``[n]`` vector and be
-    jit-traceable (it may itself contain shard_map collectives).  With
-    ``cfg.block_size > 1`` the operator contract widens to
-    ``matmat: [n, b] → [n, b]`` — pass one explicitly (e.g. an SpMM) to get
-    the single-pass multi-vector stream; otherwise ``matvec`` is vmapped
-    over columns as a correctness fallback.
+    Legacy closure-based surface — equivalent to wrapping the closures in a
+    :class:`~repro.core.operator.CallableOperator` and calling :func:`eigsh`
+    (which is exactly what it does).  ``matvec`` must map an ``[n]`` vector
+    to an ``[n]`` vector and be jit-traceable (it may itself contain
+    shard_map collectives).  With ``cfg.block_size > 1`` the operator
+    contract widens to ``matmat: [n, b] → [n, b]``; without an explicit
+    ``matmat`` the matvec is vmapped over columns as a correctness fallback.
     """
-    if cfg.block_size > 1:
-        if matmat is None:
-            assert matvec is not None, "need matvec or matmat"
-            matmat = lambda X: jax.vmap(matvec, in_axes=1, out_axes=1)(X)  # noqa: E731
-        return _lanczos_topk_block(matmat, n, cfg, v0=v0, key=key)
+    from repro.core.operator import CallableOperator
+
+    return eigsh(CallableOperator(n=n, matvec=matvec, matmat=matmat),
+                 cfg, v0=v0, key=key)
+
+
+def _lanczos_topk_single(
+    matvec: Callable[[Array], Array],
+    n: int,
+    cfg: LanczosConfig,
+    *,
+    v0: Optional[Array] = None,
+    key: Optional[Array] = None,
+) -> LanczosResult:
+    """Single-vector thick-restart Lanczos (the ``block_size=1`` engine)."""
     assert matvec is not None, "need matvec for block_size=1"
     k, m = cfg.k, cfg.m
     assert 0 < k < m <= n, (k, m, n)

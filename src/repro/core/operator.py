@@ -1,0 +1,206 @@
+"""The `LinearOperator` protocol — ARPACK reverse communication, formalized.
+
+The paper drives ARPACK through its *reverse-communication interface*: the
+eigensolver never sees the matrix, only a contract "apply the operator to
+this vector" that any implementation (CPU SpMV, GPU cuSPARSE, a PCIe-staged
+hybrid) can fulfil.  Our jax-native analogue is this protocol: ``shape``,
+``dtype``, ``mv`` ([n] → [n]) and ``mm`` ([n, b] → [n, b]), plus an optional
+mesh descriptor for sharded implementations.  Everything downstream
+(:func:`repro.core.lanczos.eigsh`, :class:`repro.core.spectral.SpectralPipeline`)
+programs against the protocol, so operator representations — COO segment-sum,
+BlockELL Pallas SpMM, the shard_map pod SpMV — swap freely behind a stable
+eigensolver, exactly the composability RCI buys the paper (and the property
+the Chebyshev-Davidson line of work relies on to swap eigensolvers).
+
+Concrete implementations are registered dataclass pytrees: the wrapped
+matrices are children (traced/sharded), execution knobs are static metadata,
+so operators cross jit boundaries like any other container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import COO, BlockELL
+from repro.sparse.ops import spmm_blockell, spmm_coo, spmv_blockell, spmv_coo
+
+Array = jax.Array
+
+
+@runtime_checkable
+class LinearOperator(Protocol):
+    """Symmetric linear operator contract driven by the eigensolver.
+
+    ``mv`` applies the operator to one vector ([n] → [n]); ``mm`` applies it
+    to a multi-vector block ([n, b] → [n, b]) — the block-Lanczos stream.
+    Implementations may carry a ``mesh`` attribute describing where their
+    collectives run (``None`` for single-device operators).
+    """
+
+    @property
+    def shape(self) -> Tuple[int, int]: ...
+
+    @property
+    def dtype(self) -> Any: ...
+
+    def mv(self, x: Array) -> Array: ...
+
+    def mm(self, x: Array) -> Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class CooOperator:
+    """Segment-sum SpMV/SpMM over a (pre-normalized) COO adjacency — the
+    reference single-device operator behind :class:`SpectralPipeline`."""
+
+    a: COO
+    mesh: Any = None  # single-device: no collective placement
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.a.shape
+
+    @property
+    def dtype(self):
+        return self.a.val.dtype
+
+    def mv(self, x: Array) -> Array:
+        return spmv_coo(self.a, x)
+
+    def mm(self, x: Array) -> Array:
+        return spmm_coo(self.a, x)
+
+
+jax.tree_util.register_dataclass(CooOperator, ["a"], ["mesh"])
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEllOperator:
+    """BlockELL(+COO tail) operator: dense strided ELL-body loads, with the
+    multi-vector ``mm`` dispatching to the Pallas ``ell_spmm`` kernel on TPU
+    (``impl``/``interpret`` mirror the kernel wrapper's knobs)."""
+
+    a: BlockELL
+    impl: str = "auto"  # "auto" | "pallas" | "ref"
+    interpret: Optional[bool] = None
+    mesh: Any = None
+
+    def __post_init__(self):
+        if self.impl not in ("auto", "pallas", "ref"):
+            raise ValueError(
+                f"BlockEllOperator.impl must be one of 'auto', 'pallas', "
+                f"'ref', got {self.impl!r}")
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.a.shape
+
+    @property
+    def dtype(self):
+        return self.a.vals.dtype
+
+    def mv(self, x: Array) -> Array:
+        return spmv_blockell(self.a, x)
+
+    def mm(self, x: Array) -> Array:
+        if self.impl == "ref":
+            return spmm_blockell(self.a, x)
+        from repro.kernels.ell_spmm.ops import ell_spmm
+
+        return ell_spmm(self.a, x, impl=self.impl, interpret=self.interpret)
+
+
+jax.tree_util.register_dataclass(BlockEllOperator, ["a"], ["impl", "interpret", "mesh"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCooOperator:
+    """Row-block-partitioned pod operator over a :class:`ShardedCOO`.
+
+    ``variant="gspmd"`` is the paper-faithful baseline (segment_sum over
+    global rows; GSPMD inserts the collectives); ``variant="shard_map"`` is
+    the locality-exploiting explicit path (one all-gather of x per
+    application — the ICI analogue of the paper's one-PCIe-transfer design;
+    ``gather_dtype=bf16`` halves those bytes).  ``mm`` moves one [n, b]
+    block per collective — the block-Lanczos amortization (DESIGN.md §4).
+    """
+
+    sm: Any  # ShardedCOO (kept untyped here to avoid a hard import cycle)
+    variant: str = "gspmd"
+    mesh: Any = None
+    axis: Any = "data"
+    gather_dtype: Any = None
+
+    def __post_init__(self):
+        if self.variant not in ("gspmd", "shard_map"):
+            raise ValueError(
+                f"ShardedCooOperator.variant must be 'gspmd' or 'shard_map', "
+                f"got {self.variant!r}")
+        if self.variant == "shard_map" and self.mesh is None:
+            raise ValueError(
+                "ShardedCooOperator(variant='shard_map') needs a mesh — the "
+                "explicit-collective SpMV is built per mesh axis")
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.sm.shape
+
+    @property
+    def dtype(self):
+        return self.sm.val.dtype
+
+    def mv(self, x: Array) -> Array:
+        from repro.sparse.distributed import make_sharded_spmv, spmv_gspmd
+
+        if self.variant == "shard_map":
+            inner = make_sharded_spmv(self.mesh, self.sm, axis=self.axis,
+                                      gather_dtype=self.gather_dtype)
+            return inner(self.sm.row_local, self.sm.col, self.sm.val, x)
+        return spmv_gspmd(self.sm, x)
+
+    def mm(self, x: Array) -> Array:
+        from repro.sparse.distributed import make_sharded_spmm, spmm_gspmd
+
+        if self.variant == "shard_map":
+            inner = make_sharded_spmm(self.mesh, self.sm, axis=self.axis,
+                                      gather_dtype=self.gather_dtype)
+            return inner(self.sm.row_local, self.sm.col, self.sm.val, x)
+        return spmm_gspmd(self.sm, x)
+
+
+jax.tree_util.register_dataclass(
+    ShardedCooOperator, ["sm"], ["variant", "mesh", "axis", "gather_dtype"])
+
+
+@dataclasses.dataclass(frozen=True)
+class CallableOperator:
+    """Adapter wrapping bare ``matvec``/``matmat`` closures into the protocol
+    (the legacy surface; also handy for tests and custom operators).
+
+    Without an explicit ``matmat``, ``mm`` vmaps ``matvec`` over columns — a
+    correctness fallback that forfeits the single-stream amortization.
+    Not a pytree (it captures closures); construct it at trace time.
+    """
+
+    n: int
+    matvec: Optional[Callable[[Array], Array]] = None
+    matmat: Optional[Callable[[Array], Array]] = None
+    dtype: Any = jnp.float32
+    mesh: Any = None
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.n)
+
+    def mv(self, x: Array) -> Array:
+        assert self.matvec is not None, "need matvec for single-vector mode"
+        return self.matvec(x)
+
+    def mm(self, x: Array) -> Array:
+        if self.matmat is not None:
+            return self.matmat(x)
+        assert self.matvec is not None, "need matvec or matmat"
+        return jax.vmap(self.matvec, in_axes=1, out_axes=1)(x)

@@ -1,40 +1,48 @@
-"""End-to-end spectral clustering (paper Fig. 2), composable and shardable.
+"""Deprecated flat entry points — thin shims over :mod:`repro.core.spectral`.
 
-``spectral_cluster`` chains the three stages; each stage is independently
-importable, and the eigensolver accepts any matvec (COO segment-sum,
-BlockELL Pallas kernel, or the shard_map pod SpMV) — the framework-level
-expression of ARPACK's reverse-communication flexibility.
+The public API is now the stage-graph facade
+(:class:`repro.core.spectral.SpectralPipeline` + execution ``Plan``); the
+functions here keep the original flat-config signatures alive with bitwise-
+identical results, emitting a DeprecationWarning.  Migration map:
+
+    spectral_cluster(w, cfg, key)            → cfg.to_pipeline().run(w, key)
+    spectral_cluster_from_points(x, cfg, ...) → SpectralPipeline(...,
+                                                  graph=GraphConfig(...)).run(x, key)
+    spectral_cluster_sharded(sm, cfg, ...)    → plan=Plan(device="sharded", ...)
+    spectral_cluster_from_points_sharded(...) → same plan, raw-points input
+
+``SpectralResult`` and ``default_basis_size`` live in
+:mod:`repro.core.spectral` now and are re-exported here unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+import warnings
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-import repro.core.laplacian as lap
-import repro.core.lanczos as lz
+from repro.core.operator import CallableOperator
+from repro.core.similarity import Measure
+from repro.core.spectral import (  # noqa: F401  (re-exports)
+    EigConfig,
+    GraphConfig,
+    Plan,
+    SpectralPipeline,
+    SpectralResult,
+    default_basis_size,
+)
 import repro.core.kmeans as km
-from repro.core.similarity import Measure, build_knn_graph
 from repro.sparse.formats import COO
-from repro.sparse.ops import spmm_coo, spmv_coo
 
 Array = jax.Array
 
 
-class SpectralResult(NamedTuple):
-    labels: Array  # [n] cluster assignment
-    embedding: Array  # [n, k] row-normalized spectral embedding
-    eigenvalues: Array  # [k] of L_sym (ascending; ~0 first)
-    eig_residuals: Array
-    kmeans_inertia: Array
-    lanczos_restarts: Array
-    kmeans_iterations: Array
-
-
 @dataclasses.dataclass(frozen=True)
 class SpectralClusteringConfig:
+    """Deprecated flat config — prefix-named knobs re-plumbed into the nested
+    per-stage configs by :meth:`to_pipeline`."""
+
     n_clusters: int
     n_eigvecs: Optional[int] = None  # default: n_clusters
     lanczos_m: Optional[int] = None  # default: ARPACK-style 2k (scaled by block)
@@ -49,12 +57,35 @@ class SpectralClusteringConfig:
     fixed_restarts: Optional[int] = None  # static-cost mode (dry-run/bench)
     fixed_kmeans_iters: Optional[int] = None
 
+    def to_pipeline(self, *, graph: Optional[GraphConfig] = None,
+                    plan: Optional[Plan] = None) -> SpectralPipeline:
+        """The equivalent :class:`SpectralPipeline` (the migration path)."""
+        return SpectralPipeline(
+            n_clusters=self.n_clusters,
+            graph=graph or GraphConfig(),
+            eig=EigConfig(
+                n_eigvecs=self.n_eigvecs,
+                basis_m=self.lanczos_m,
+                tol=self.lanczos_tol,
+                max_restarts=self.lanczos_max_restarts,
+                block_size=self.lanczos_block_size,
+                drop_first=self.drop_first,
+                fixed_restarts=self.fixed_restarts,
+            ),
+            kmeans=km.KMeansConfig(
+                max_iters=self.kmeans_max_iters,
+                iter=self.kmeans_iter,
+                update=self.kmeans_update,
+                assign=self.kmeans_assign,
+                fixed_iters=self.fixed_kmeans_iters,
+            ),
+            plan=plan or Plan(),
+        )
 
-def default_basis_size(n: int, k: int, b: int = 1) -> int:
-    """ARPACK-style ncv ≥ 2k, widened with the Krylov block so every restart
-    cycle still runs several block steps (block mode loses polynomial degree
-    per basis column; extra columns buy it back — DESIGN.md §3)."""
-    return min(n, max(2 * k, k + 16, k + 8 * b))
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (repro.core.spectral)",
+                  DeprecationWarning, stacklevel=3)
 
 
 def spectral_cluster(
@@ -66,69 +97,23 @@ def spectral_cluster(
     matmat: Optional[Callable[[Array], Array]] = None,
     deg: Optional[Array] = None,
 ) -> SpectralResult:
-    """Cluster the similarity graph ``w`` into ``cfg.n_clusters`` parts.
+    """Deprecated: ``cfg.to_pipeline().run(w, key)``.
 
-    ``matvec`` overrides the operator application (must implement
-    x ↦ D^{-1/2} W D^{-1/2} x); used by the distributed launcher to plug in
-    the shard_map SpMV.  With ``cfg.lanczos_block_size > 1`` the eigensolver
-    instead drives ``matmat`` ([n, b] ↦ [n, b]), defaulting to the COO SpMM.
-    ``w`` must be row-sorted, symmetric, non-negative.
+    ``matvec``/``matmat`` override the operator application (wrapped into a
+    :class:`~repro.core.operator.CallableOperator`); prefer passing a
+    ``LinearOperator`` to :meth:`SpectralPipeline.embed` directly.
+    ``deg`` was always ignored and remains so.
     """
-    n = w.shape[0]
-    k = cfg.n_eigvecs or cfg.n_clusters
-    b = cfg.lanczos_block_size
-    g = lap.normalized_graph(w)
-    if matvec is None and matmat is None:
-        adj = g.adj_sym
-
-        def matvec(x):  # noqa: F811 - intentional closure
-            return spmv_coo(adj, x)
-
-        def matmat(X):  # noqa: F811 - intentional closure
-            return spmm_coo(adj, X)
-
-    m = cfg.lanczos_m or default_basis_size(n, k, b)
-    lcfg = lz.LanczosConfig(
-        k=k + (1 if cfg.drop_first else 0),
-        m=max(m, k + (2 if cfg.drop_first else 1)),
-        max_restarts=cfg.lanczos_max_restarts,
-        tol=cfg.lanczos_tol,
-        which="LA",
-        fixed_restarts=cfg.fixed_restarts,
-        block_size=b,
-    )
+    del deg  # kept for signature compatibility; never consumed
+    _warn_deprecated("spectral_cluster", "SpectralPipeline.run")
+    pipe = cfg.to_pipeline()
+    state = pipe.prepare(w)
+    op = None
+    if matvec is not None or matmat is not None:
+        op = CallableOperator(n=w.shape[0], matvec=matvec, matmat=matmat)
     key, k_eig, k_km = jax.random.split(key, 3)
-    # deterministic, informative start: D^{1/2}·1 is exactly the trivial
-    # eigenvector of A_sym — Lanczos deflates it in one step.
-    v0 = jnp.sqrt(jnp.maximum(g.deg.astype(jnp.float32), 0.0)) + 1e-3
-    eig = lz.lanczos_topk(matvec, n, lcfg, v0=v0, key=k_eig, matmat=matmat)
-
-    vecs = eig.eigenvectors
-    vals = eig.eigenvalues
-    if cfg.drop_first:
-        vecs = vecs[:, 1:]
-        vals = vals[1:]
-    h = lap.embed_rows(vecs, g.inv_sqrt_deg)  # D^{-1/2}-rescale + row-normalize
-
-    kcfg = km.KMeansConfig(
-        k=cfg.n_clusters,
-        max_iters=cfg.kmeans_max_iters,
-        iter=cfg.kmeans_iter,
-        update=cfg.kmeans_update,
-        assign=cfg.kmeans_assign,
-        fixed_iters=cfg.fixed_kmeans_iters,
-    )
-    res = km.kmeans(h, kcfg, k_km)
-
-    return SpectralResult(
-        labels=res.labels,
-        embedding=h,
-        eigenvalues=lap.smallest_laplacian_eigs_from_adj(vals),
-        eig_residuals=eig.residuals,
-        kmeans_inertia=res.inertia,
-        lanczos_restarts=eig.restarts,
-        kmeans_iterations=res.iterations,
-    )
+    emb = pipe.embed(state, k_eig, operator=op)
+    return pipe.cluster(emb, k_km)
 
 
 def spectral_cluster_from_points(
@@ -143,15 +128,9 @@ def spectral_cluster_from_points(
     knn_eps: Array | float | None = None,
     knn_impl: str = "auto",
 ) -> SpectralResult:
-    """Points in, labels out — the paper's true end-to-end contract (Fig. 2
-    including Stage 1), fully on device and jit-safe.
-
-    Stage 1 is the fused ``knn_topk``-backed :func:`build_knn_graph` (no host
-    neighbor loop); Stages 2-3 are :func:`spectral_cluster` unchanged.
-    ``points`` optionally separates the neighbor-search coordinates from the
-    similarity features (DTI: spatial kNN, profile cross-correlation);
-    ``knn_eps`` caps neighbors at the given radius (degree-capped ε-ball).
-    """
-    w = build_knn_graph(x, knn_k, points=points, measure=measure, sigma=sigma,
-                        eps=knn_eps, impl=knn_impl)
-    return spectral_cluster(w, cfg, key)
+    """Deprecated: ``SpectralPipeline(..., graph=GraphConfig(...)).run(x, key)``."""
+    _warn_deprecated("spectral_cluster_from_points",
+                     "SpectralPipeline.run with a GraphConfig")
+    pipe = cfg.to_pipeline(graph=GraphConfig(
+        knn_k=knn_k, measure=measure, sigma=sigma, eps=knn_eps, impl=knn_impl))
+    return pipe.run(x, key, points=points)

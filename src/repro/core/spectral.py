@@ -1,0 +1,468 @@
+"""Unified stage-graph API: one entry point for local and sharded execution.
+
+The paper's architecture is a three-stage pipeline — kNN similarity graph →
+Laplacian eigensolver → k-means — glued together by ARPACK's reverse-
+communication interface.  :class:`SpectralPipeline` is that architecture as
+a facade: nested per-stage configs (:class:`GraphConfig`,
+:class:`EigConfig`, :class:`~repro.core.kmeans.KMeansConfig`), an execution
+:class:`Plan` (single device or a mesh), and three independently runnable,
+resumable stages::
+
+    pipe  = SpectralPipeline(n_clusters=8)
+    state = pipe.build_graph(x)        # Stage 1 (or pipe.prepare(w) for a
+                                       #   prebuilt COO / ShardedCOO graph)
+    emb   = pipe.embed(state, key)     # Stage 2: Lanczos → spectral embedding
+    out   = pipe.cluster(emb, key2)    # Stage 3: k-means on the embedding
+    out   = pipe.run(x_or_graph, key)  # or all three at once
+
+Stage boundaries are real state objects, so serving-shaped reuse is free:
+``pipe.cluster(emb, key, n_clusters=2 * k)`` re-clusters a cached embedding
+at a different k without re-entering the eigensolver.
+
+Plan dispatch replaces the old parallel ``_sharded`` code paths: the same
+stage graph runs on one device (``Plan()``), over a row-partitioned
+:class:`~repro.sparse.distributed.ShardedCOO` (operator collectives chosen
+by ``plan.variant``), or with a row-block-sharded Stage 1 for raw points
+(``Plan(device="sharded", mesh=...)``).  All operator plumbing goes through
+the :class:`~repro.core.operator.LinearOperator` protocol — no bare
+matvec/matmat closures anywhere in the stage graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.kmeans as km
+import repro.core.lanczos as lz
+import repro.core.laplacian as lap
+from repro.compat import needs_argsort_gather_workaround
+from repro.core.operator import CooOperator, LinearOperator, ShardedCooOperator
+from repro.core.similarity import build_knn_graph, graph_from_knn
+from repro.sparse.distributed import ShardedCOO, normalize_sharded, spmv_gspmd
+from repro.sparse.formats import COO
+
+Array = jax.Array
+
+KMeansConfig = km.KMeansConfig  # the Stage-3 nested config (re-exported)
+
+_MEASURES = ("cosine", "cross_correlation", "exp_decay")
+_KNN_IMPLS = ("auto", "pallas", "ref")
+_DEVICES = ("single", "sharded")
+_VARIANTS = ("gspmd", "shard_map")
+
+
+class SpectralResult(NamedTuple):
+    labels: Array  # [n] cluster assignment
+    embedding: Array  # [n, k] row-normalized spectral embedding
+    eigenvalues: Array  # [k] of L_sym (ascending; ~0 first)
+    eig_residuals: Array
+    kmeans_inertia: Array
+    lanczos_restarts: Array
+    kmeans_iterations: Array
+
+
+def default_basis_size(n: int, k: int, b: int = 1) -> int:
+    """ARPACK-style ncv ≥ 2k, widened with the Krylov block so every restart
+    cycle still runs several block steps (block mode loses polynomial degree
+    per basis column; extra columns buy it back — DESIGN.md §3)."""
+    return min(n, max(2 * k, k + 16, k + 8 * b))
+
+
+# ---------------------------------------------------------------------------
+# Per-stage configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    """Stage-1 knobs (kNN similarity-graph construction, paper Alg. 1).
+
+    ``block_q``/``block_k`` default to the per-path kernel tile choices
+    (256 on the single-device search, 1024 rows/shard on the row-block
+    sharded search) when left ``None``.
+    """
+
+    knn_k: int = 10
+    measure: str = "exp_decay"  # "cosine" | "cross_correlation" | "exp_decay"
+    sigma: float = 1.0
+    eps: Union[float, Array, None] = None  # degree-capped ε-ball radius
+    impl: str = "auto"  # knn_topk dispatch: "auto" | "pallas" | "ref"
+    block_q: Optional[int] = None
+    block_k: Optional[int] = None
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.measure not in _MEASURES:
+            raise ValueError(
+                f"GraphConfig.measure must be one of {_MEASURES}, got "
+                f"{self.measure!r}")
+        if self.impl not in _KNN_IMPLS:
+            raise ValueError(
+                f"GraphConfig.impl must be one of {_KNN_IMPLS} (knn_topk "
+                f"kernel dispatch), got {self.impl!r}")
+        if self.knn_k < 1:
+            raise ValueError(f"GraphConfig.knn_k must be >= 1, got {self.knn_k}")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["eps"] is not None:
+            if getattr(d["eps"], "size", 1) != 1:
+                raise ValueError(
+                    "GraphConfig.eps is a per-node array — not JSON-"
+                    "serializable; to_dict() needs a scalar radius (or None)")
+            d["eps"] = float(d["eps"])
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class EigConfig:
+    """Stage-2 knobs (restarted Lanczos eigensolver, paper Alg. 2-3)."""
+
+    n_eigvecs: Optional[int] = None  # embedding width; default: n_clusters
+    basis_m: Optional[int] = None  # Krylov basis (ARPACK ncv); default 2k-ish
+    tol: float = 1e-5
+    max_restarts: int = 60
+    block_size: int = 1  # Krylov block width b (>1: multi-vector SpMM mode)
+    drop_first: bool = False  # drop the trivial eigenvector from the embedding
+    fixed_restarts: Optional[int] = None  # static-cost mode (dry-run/bench)
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(
+                f"EigConfig.block_size must be >= 1, got {self.block_size}")
+        if self.tol <= 0:
+            raise ValueError(f"EigConfig.tol must be > 0, got {self.tol}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Execution plan: where the stage graph runs and which collective
+    schedule the sharded operator uses.
+
+    device        "single" (default) or "sharded".  A ShardedCOO input always
+                  runs the sharded Stage 2-3 regardless (its layout implies
+                  the mesh); ``device="sharded"`` additionally row-block-
+                  shards Stage 1 for raw-points inputs and enables the
+                  explicit-collective Stage 3 under ``variant="shard_map"``.
+    mesh          jax Mesh (required for shard_map collectives and the
+                  sharded Stage 1; not serialized by :meth:`to_dict`).
+    axis          mesh axis name (or tuple) the rows are partitioned over.
+    variant       sharded operator engine: "gspmd" (paper-faithful baseline,
+                  partitioner-chosen collectives) | "shard_map" (explicit
+                  one-all-gather-per-application schedule).
+    gather_dtype  optional downcast for shard_map all-gathers (e.g.
+                  "bfloat16" halves ICI bytes; accumulation stays fp32).
+    """
+
+    device: str = "single"
+    mesh: Any = None
+    axis: Any = "data"
+    variant: str = "gspmd"
+    gather_dtype: Any = None
+
+    def __post_init__(self):
+        if self.device not in _DEVICES:
+            raise ValueError(
+                f"Plan.device must be one of {_DEVICES}, got {self.device!r} "
+                f"(pass mesh/axis/variant for the sharded plan)")
+        if self.variant not in _VARIANTS:
+            raise ValueError(
+                f"Plan.variant must be one of {_VARIANTS}, got "
+                f"{self.variant!r}")
+        # NOTE: variant="shard_map" needs a mesh at *dispatch* time (the
+        # ShardedCooOperator raises); construction stays mesh-free so plans
+        # round-trip through to_dict()/from_dict() and get the mesh
+        # reattached afterwards.
+        if self.gather_dtype is not None:
+            # canonicalize to the dtype name so configs stay JSON-safe and
+            # round-trip equal (astype accepts the string form)
+            object.__setattr__(self, "gather_dtype",
+                               jnp.dtype(self.gather_dtype).name)
+
+    def to_dict(self) -> dict:
+        return {
+            "device": self.device,
+            "axis": list(self.axis) if isinstance(self.axis, tuple) else self.axis,
+            "variant": self.variant,
+            "gather_dtype": self.gather_dtype,
+            # mesh is a runtime resource, not config — reattach it after
+            # from_dict via dataclasses.replace(plan, mesh=mesh)
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict, *, mesh: Any = None) -> "Plan":
+        axis = d.get("axis", "data")
+        return cls(
+            device=d.get("device", "single"),
+            mesh=mesh,
+            axis=tuple(axis) if isinstance(axis, list) else axis,
+            variant=d.get("variant", "gspmd"),
+            gather_dtype=d.get("gather_dtype"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stage states (the resumable checkpoints between stages)
+# ---------------------------------------------------------------------------
+
+class GraphState(NamedTuple):
+    """Stage-1 output: the sym-normalized adjacency + degree bookkeeping.
+    ``adj`` is a COO (single-device operator) or ShardedCOO (pod operator)."""
+
+    adj: Union[COO, ShardedCOO]  # D^{-1/2} W D^{-1/2}
+    deg: Array  # [n] degrees of the raw graph
+    inv_sqrt_deg: Array  # [n] D^{-1/2} (0 where isolated)
+
+
+class EmbedState(NamedTuple):
+    """Stage-2 output: the spectral embedding, cacheable/re-clusterable."""
+
+    embedding: Array  # [n, k] row-normalized spectral embedding
+    eigenvalues: Array  # [k] Laplacian eigenvalues 1-θ (ascending; ~0 first)
+    residuals: Array  # eigensolver residuals (pre drop_first bookkeeping)
+    restarts: Array  # [] Lanczos restart count
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpectralPipeline:
+    """The paper's three-stage pipeline as a single configured object.
+
+    A frozen dataclass: hashable, closable over by jit, and JSON-round-
+    trippable via :meth:`to_dict` / :meth:`from_dict` (the serving dry-run
+    reproducibility contract — only ``plan.mesh`` is a runtime resource that
+    must be reattached after deserialization).
+    """
+
+    n_clusters: int
+    graph: GraphConfig = GraphConfig()
+    eig: EigConfig = EigConfig()
+    kmeans: KMeansConfig = KMeansConfig()
+    plan: Plan = Plan()
+
+    def __post_init__(self):
+        if self.n_clusters < 1:
+            raise ValueError(
+                f"SpectralPipeline.n_clusters must be >= 1, got {self.n_clusters}")
+        if self.kmeans.k is not None and self.kmeans.k != self.n_clusters:
+            raise ValueError(
+                f"KMeansConfig.k={self.kmeans.k} conflicts with "
+                f"n_clusters={self.n_clusters} — leave k unset (the pipeline "
+                f"fills it) or pass n_clusters= to cluster() to re-cluster "
+                f"at a different k")
+
+    # -- config plumbing ----------------------------------------------------
+
+    def _lanczos_config(self, n: int) -> lz.LanczosConfig:
+        e = self.eig
+        k = e.n_eigvecs or self.n_clusters
+        b = e.block_size
+        m = e.basis_m or default_basis_size(n, k, b)
+        return lz.LanczosConfig(
+            k=k + (1 if e.drop_first else 0),
+            m=max(m, k + (2 if e.drop_first else 1)),
+            max_restarts=e.max_restarts,
+            tol=e.tol,
+            which="LA",
+            fixed_restarts=e.fixed_restarts,
+            block_size=b,
+        )
+
+    def operator(self, state: GraphState) -> LinearOperator:
+        """The Stage-2 operator for this graph under this plan — the single
+        place operator representations are chosen (swap freely here)."""
+        if isinstance(state.adj, ShardedCOO):
+            return ShardedCooOperator(
+                state.adj, variant=self.plan.variant, mesh=self.plan.mesh,
+                axis=self.plan.axis, gather_dtype=self.plan.gather_dtype)
+        return CooOperator(state.adj)
+
+    # -- Stage 1 ------------------------------------------------------------
+
+    def prepare(self, w: Union[COO, ShardedCOO]) -> GraphState:
+        """Admit a prebuilt similarity graph as Stage-1 output (normalize +
+        degree bookkeeping).  Accepts a COO or a row-partitioned ShardedCOO."""
+        if isinstance(w, ShardedCOO):
+            ones = jnp.ones((w.shape[0],), jnp.float32)
+            deg = spmv_gspmd(w, ones)  # degree pass (cheap, once)
+            isd = jnp.where(deg > 0,
+                            jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+            return GraphState(adj=normalize_sharded(w, deg), deg=deg,
+                              inv_sqrt_deg=isd)
+        g = lap.normalized_graph(w)
+        return GraphState(adj=g.adj_sym, deg=g.deg,
+                          inv_sqrt_deg=g.inv_sqrt_deg)
+
+    def build_graph(self, x: Array, *, points: Optional[Array] = None) -> GraphState:
+        """Stage 1 from raw points: fused kNN search → similarity → normalized
+        COO.  Under ``Plan(device="sharded")`` the O(n²d) neighbor search runs
+        row-block-parallel over the mesh; assembly and normalization stay on
+        the plain jit path (their cost is O(nk)).
+
+        ``points`` optionally separates the neighbor-search coordinates from
+        the similarity features (DTI: spatial kNN, profile cross-correlation).
+        """
+        g = self.graph
+        if self.plan.device == "sharded":
+            if self.plan.mesh is None:
+                raise ValueError(
+                    "Plan(device='sharded') needs a mesh for the row-block "
+                    "Stage 1 (build_graph)")
+            from repro.core.distributed_pipeline import make_knn_rowblock
+
+            if points is not None:
+                raise NotImplementedError(
+                    "separate search points are not yet threaded through the "
+                    "row-block sharded Stage 1 — pass them on the single-"
+                    "device plan")
+            n = x.shape[0]
+            axis = self.plan.axis
+            axis = axis if isinstance(axis, str) else axis[0]
+            n_shards = self.plan.mesh.shape[axis]
+            assert n % n_shards == 0, (n, n_shards)
+            knn = make_knn_rowblock(
+                self.plan.mesh, g.knn_k, axis=axis,
+                block_q=g.block_q or 1024, impl=g.impl, interpret=g.interpret)
+            dist2, idx = knn(x)
+            if needs_argsort_gather_workaround():
+                # Re-replicate the small [n, k] search results before graph
+                # assembly: the O(n²d) work was the sharded part; assembly is
+                # O(nk) and the argsort gather miscompiles under GSPMD on
+                # operands left partially replicated over the unmentioned
+                # mesh axes (psum-doubling, jax 0.4.x CPU — ROADMAP: "Revisit
+                # the GSPMD argsort-gather miscompile").  Gated on the jax
+                # version so bumping the pin drops the extra all-gather.
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                rep = NamedSharding(self.plan.mesh, P())
+                dist2 = jax.lax.with_sharding_constraint(dist2, rep)
+                idx = jax.lax.with_sharding_constraint(idx, rep)
+            w = graph_from_knn(x, dist2, idx, measure=g.measure, sigma=g.sigma,
+                               eps=g.eps)
+            return self.prepare(w)
+        w = build_knn_graph(
+            x, g.knn_k, points=points, measure=g.measure, sigma=g.sigma,
+            eps=g.eps, impl=g.impl, block_q=g.block_q or 256,
+            block_k=g.block_k or 256, interpret=g.interpret)
+        return self.prepare(w)
+
+    # -- Stage 2 ------------------------------------------------------------
+
+    def embed(self, state: GraphState, key: Array, *,
+              operator: Optional[LinearOperator] = None) -> EmbedState:
+        """Stage 2: top-k eigenpairs of the normalized adjacency → the
+        Ng-Jordan-Weiss spectral embedding.  ``operator`` overrides the
+        plan-chosen operator (any :class:`LinearOperator` — e.g. a
+        :class:`~repro.core.operator.BlockEllOperator`)."""
+        n = state.adj.shape[0]
+        op = self.operator(state) if operator is None else operator
+        lcfg = self._lanczos_config(n)
+        # deterministic, informative start: D^{1/2}·1 is exactly the trivial
+        # eigenvector of A_sym — Lanczos deflates it in one step.
+        v0 = jnp.sqrt(jnp.maximum(state.deg.astype(jnp.float32), 0.0)) + 1e-3
+        eig = lz.eigsh(op, lcfg, v0=v0, key=key)
+        vecs = eig.eigenvectors
+        vals = eig.eigenvalues
+        if self.eig.drop_first:
+            vecs = vecs[:, 1:]
+            vals = vals[1:]
+        h = lap.embed_rows(vecs, state.inv_sqrt_deg)
+        return EmbedState(
+            embedding=h,
+            eigenvalues=lap.smallest_laplacian_eigs_from_adj(vals),
+            residuals=eig.residuals,
+            restarts=eig.restarts,
+        )
+
+    # -- Stage 3 ------------------------------------------------------------
+
+    def cluster(self, state: EmbedState, key: Array, *,
+                n_clusters: Optional[int] = None) -> SpectralResult:
+        """Stage 3: k-means over a (possibly cached) spectral embedding.
+
+        ``n_clusters`` overrides the pipeline's k — re-clustering a cached
+        embedding at a different granularity without re-entering the
+        eigensolver (the serving scenario).
+        """
+        kcfg = self.kmeans.resolved(n_clusters or self.n_clusters)
+        res = self._run_kmeans(state.embedding, kcfg, key)
+        return SpectralResult(
+            labels=res.labels,
+            embedding=state.embedding,
+            eigenvalues=state.eigenvalues,
+            eig_residuals=state.residuals,
+            kmeans_inertia=res.inertia,
+            lanczos_restarts=state.restarts,
+            kmeans_iterations=res.iterations,
+        )
+
+    def _run_kmeans(self, h: Array, kcfg: KMeansConfig, key: Array):
+        # Plan dispatch: the shard_map plan gets the explicit one-psum-per-
+        # iteration Lloyd loop (fused iteration only — the two-pass modes
+        # stay on the GSPMD formulation, as do row counts that don't tile
+        # the mesh axis).
+        plan = self.plan
+        if plan.device == "sharded" and plan.variant == "shard_map" \
+                and kcfg.iter == "fused" and plan.mesh is not None:
+            import math as _math
+
+            axes = (plan.axis,) if isinstance(plan.axis, str) else tuple(plan.axis)
+            axis_size = _math.prod(plan.mesh.shape[a] for a in axes)
+            if h.shape[0] % axis_size == 0:
+                from repro.core.distributed_pipeline import kmeans_sharded
+
+                return kmeans_sharded(h, kcfg, key, mesh=plan.mesh,
+                                      axis=plan.axis)
+        return km.kmeans(h, kcfg, key)
+
+    # -- end to end ---------------------------------------------------------
+
+    def run(self, data: Union[Array, COO, ShardedCOO], key: Array, *,
+            points: Optional[Array] = None) -> SpectralResult:
+        """Points/graph in, labels out — all three stages under one call.
+
+        ``data`` may be raw points ([n, d] array → Stage 1 runs), a COO
+        similarity graph, or a row-partitioned ShardedCOO (pod operator).
+        """
+        if isinstance(data, (COO, ShardedCOO)):
+            if points is not None:
+                raise ValueError(
+                    "points= only applies to Stage 1 (raw-points input); a "
+                    "prebuilt graph already fixed its neighbor structure")
+            state = self.prepare(data)
+        else:
+            state = self.build_graph(data, points=points)
+        key, k_eig, k_km = jax.random.split(key, 3)
+        emb = self.embed(state, k_eig)
+        return self.cluster(emb, k_km)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-safe nested dict (serve/dry-run reproducibility).  The plan's
+        mesh is a runtime resource and is not serialized."""
+        return {
+            "n_clusters": self.n_clusters,
+            "graph": self.graph.to_dict(),
+            "eig": self.eig.to_dict(),
+            "kmeans": dataclasses.asdict(self.kmeans),
+            "plan": self.plan.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict, *, mesh: Any = None) -> "SpectralPipeline":
+        return cls(
+            n_clusters=d["n_clusters"],
+            graph=GraphConfig(**d.get("graph", {})),
+            eig=EigConfig(**d.get("eig", {})),
+            kmeans=KMeansConfig(**d.get("kmeans", {})),
+            plan=Plan.from_dict(d.get("plan", {}), mesh=mesh),
+        )

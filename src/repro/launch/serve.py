@@ -19,11 +19,18 @@ from repro.configs import ARCHS
 
 
 def serve_cluster(args):
-    from repro.core.pipeline import SpectralClusteringConfig, spectral_cluster
+    from repro.core.spectral import SpectralPipeline
     from repro.data.sbm import sbm_graph
 
-    cfg = SpectralClusteringConfig(n_clusters=args.clusters)
-    fn = jax.jit(lambda w, key: spectral_cluster(w, cfg, key))
+    pipe = SpectralPipeline(n_clusters=args.clusters)
+    print(f"[config] {pipe.to_dict()}")  # the reproducibility record
+    fn = jax.jit(lambda w, key: pipe.run(w, key))
+    prepare = jax.jit(pipe.prepare)
+    embed = jax.jit(pipe.embed)
+    recluster = {
+        k2: jax.jit(lambda e, key, k2=k2: pipe.cluster(e, key, n_clusters=k2))
+        for k2 in (args.recluster_k or [])
+    }
     for req in range(args.requests):
         coo, _ = sbm_graph(args.n // args.clusters, args.clusters, 0.2, 0.01, seed=req)
         t0 = time.perf_counter()
@@ -32,6 +39,20 @@ def serve_cluster(args):
         print(f"[req {req}] n={coo.shape[0]} k={args.clusters} "
               f"latency={time.perf_counter()-t0:.3f}s "
               f"restarts={int(out.lanczos_restarts)}")
+        if recluster:
+            # the stage-graph serving shape: embed once, serve many k —
+            # Stage 3 reruns on the cached embedding, Lanczos does not
+            t0 = time.perf_counter()
+            emb = embed(prepare(coo), jax.random.PRNGKey(req))
+            jax.block_until_ready(emb.embedding)
+            t_embed = time.perf_counter() - t0
+            for k2, fn2 in recluster.items():
+                t0 = time.perf_counter()
+                out2 = fn2(emb, jax.random.PRNGKey(1000 + req))
+                jax.block_until_ready(out2.labels)
+                print(f"[req {req}]   re-cluster k={k2}: "
+                      f"{time.perf_counter()-t0:.3f}s on the cached embedding "
+                      f"(embed once: {t_embed:.3f}s)")
 
 
 def serve_decode(args):
@@ -66,6 +87,9 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--clusters", type=int, default=16)
     ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--recluster-k", type=int, nargs="*", default=None,
+                    help="extra cluster counts served from the cached "
+                         "embedding (Stage 3 only, no second eigensolve)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)

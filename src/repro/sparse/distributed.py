@@ -70,6 +70,20 @@ def padded_rows(n: int, num_shards: int) -> int:
     return ((n + num_shards - 1) // num_shards) * num_shards
 
 
+def global_rows(sm: "ShardedCOO") -> Array:
+    """Per-edge global row ids recovered from the (shard, local-row) layout."""
+    shard = jnp.arange(sm.num_shards, dtype=jnp.int32).repeat(sm.edges_per_shard)
+    return sm.row_local + shard * sm.rows_per_shard
+
+
+def normalize_sharded(sm: "ShardedCOO", deg: Array) -> "ShardedCOO":
+    """val ← val · d^{-1/2}[row] · d^{-1/2}[col]  (sym normalization)."""
+    isd = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+    grow = global_rows(sm)
+    val = sm.val * isd[grow] * isd[sm.col]
+    return dataclasses.replace(sm, val=val)
+
+
 def partition_coo_by_rows(m: COO, num_shards: int) -> ShardedCOO:
     """Host-side re-bucketing of a row-sorted COO onto ``num_shards`` blocks."""
     row = np.asarray(m.row)
@@ -114,8 +128,7 @@ def sharded_coo_specs(axis=("data",)) -> ShardedCOO:
 def spmv_gspmd(sm: ShardedCOO, x: Array) -> Array:
     """Plain segment_sum over globally-indexed rows; GSPMD chooses the
     collectives.  Used as the §Perf baseline for the eigensolver cells."""
-    shard = jnp.arange(sm.num_shards, dtype=jnp.int32).repeat(sm.edges_per_shard)
-    grow = sm.row_local + shard * sm.rows_per_shard
+    grow = global_rows(sm)
     contrib = sm.val.astype(jnp.float32) * x[sm.col].astype(jnp.float32)
     y = jax.ops.segment_sum(contrib, grow, num_segments=sm.shape[0])
     return y.astype(x.dtype)
@@ -165,8 +178,7 @@ def spmm_gspmd(sm: ShardedCOO, x: Array) -> Array:
     """Y = W @ X for dense X [n, b] over globally-indexed rows (GSPMD
     baseline).  Per-column 1-D segment sums, same rationale as
     :func:`repro.sparse.ops.spmm_coo`."""
-    shard = jnp.arange(sm.num_shards, dtype=jnp.int32).repeat(sm.edges_per_shard)
-    grow = sm.row_local + shard * sm.rows_per_shard
+    grow = global_rows(sm)
     val = sm.val.astype(jnp.float32)
     cols = [
         jax.ops.segment_sum(val * x[:, j][sm.col].astype(jnp.float32), grow,
