@@ -7,10 +7,11 @@ loop (the Matlab-serial analogue), on a scaled DTI-like workload.
 
 Additionally sweeps the device-resident Stage 1 (`build_knn_graph`: fused
 kNN search → similarity → symmetric sorted COO, all under one jit) against
-the host path (`knn_edges` + `build_similarity_graph`) and writes
-``BENCH_similarity.json`` — edges/s and the device-vs-host speedup — so the
-Stage-1 perf trajectory is tracked across PRs.  ``--smoke`` shrinks the
-sweep for CI.
+the host path (`knn_edges` + `build_similarity_graph`), and the exact
+O(n²d) search against the LSH candidate-generation + exact-rerank path
+(`method="lsh"`, O(n·m·d)) with recall@k columns, writing everything into
+``BENCH_similarity.json`` — so the Stage-1 perf trajectory is tracked
+across PRs.  ``--smoke`` shrinks both sweeps for CI.
 """
 from __future__ import annotations
 
@@ -107,11 +108,76 @@ def knn_graph_sweep(out_path: str = "BENCH_similarity.json", smoke: bool = False
         "backend": jax.default_backend(),
         "smoke": smoke,
         "entries": entries,
+        "ann_entries": ann_sweep(smoke=smoke),
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out_path}")
     return payload
+
+
+def ann_sweep(smoke: bool = False) -> list:
+    """Exact vs LSH Stage-1 neighbor search: wall-clock per call + recall@k,
+    on clustered Gaussians (the LSH recall-gate data shape).  Times the
+    *search* — the method-dependent part of Stage 1 (graph assembly is
+    O(nk) and byte-identical downstream of either) — as warmup +
+    median-of-3, reusing the last timed call's outputs for the recall
+    column rather than running a separate search for it.  The exact
+    search is O(n²d); the LSH path is candidate
+    generation (O(T·n log n)) + exact rerank over m candidates per row
+    (O(n·m·d)), so the speedup grows linearly in n/m — the n=50k row is
+    the acceptance gate (≥ 2× on CPU; the asymptotic regime the ROADMAP's
+    n ≫ 100k item is about).
+    """
+    from repro.core.spectral import GraphConfig  # validated knob defaults
+    from repro.kernels.knn_topk.ops import knn_topk, knn_topk_rerank
+    from repro.kernels.lsh_candidates.ops import (default_candidates,
+                                                  lsh_candidates)
+
+    g = GraphConfig()  # single source of the default LSH knobs
+    configs = [(2000, 16, 10)] if smoke else [(20000, 16, 10), (50000, 16, 10)]
+    entries = []
+    for n, d, k in configs:
+        rng = np.random.default_rng(0)
+        centers = rng.normal(size=(max(n // 400, 4), d)).astype(np.float32) * 4
+        x = (centers[rng.integers(0, centers.shape[0], n)]
+             + rng.normal(size=(n, d)).astype(np.float32))
+        xj = jnp.asarray(x)
+        m = default_candidates(k, g.n_tables)
+
+        fn_exact = jax.jit(lambda xx: knn_topk(xx, k, impl="auto"))
+        fn_lsh = jax.jit(lambda xx: knn_topk_rerank(
+            xx, lsh_candidates(xx, m=m, n_tables=g.n_tables,
+                               n_bits=g.n_bits), k))
+
+        def timed(fn, iters=3):
+            jax.block_until_ready(fn(xj))  # compile + warmup
+            times = []
+            for _ in range(iters):  # median-of-3: exact O(n²d) timing is
+                t0 = time.perf_counter()  # load-sensitive at 50k on CPU
+                out = jax.block_until_ready(fn(xj))
+                times.append(time.perf_counter() - t0)
+            return sorted(times)[len(times) // 2] * 1e6, out
+
+        us_exact, (_, i_ex) = timed(fn_exact)
+        us_lsh, (_, i_lsh) = timed(fn_lsh)
+
+        i_ex, i_lsh = np.asarray(i_ex), np.asarray(i_lsh)
+        match = (i_lsh[:, :, None] == i_ex[:, None, :]) & (i_lsh >= 0)[:, :, None]
+        recall = match.any(-1).sum() / (n * k)
+
+        speedup = us_exact / us_lsh
+        emit(f"similarity/ann_lsh_n{n}_k{k}", us_lsh,
+             f"recall@{k}={recall:.4f};exact_speedup={speedup:.1f}x")
+        entries.append({
+            "n": n, "d": d, "k": k, "m_candidates": m,
+            "n_tables": g.n_tables, "n_bits": g.n_bits,
+            "us_per_call_exact": us_exact,
+            "us_per_call_lsh": us_lsh,
+            "recall_at_k": recall,
+            "speedup_vs_exact": speedup,
+        })
+    return entries
 
 
 def main() -> None:

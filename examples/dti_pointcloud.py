@@ -14,7 +14,9 @@ the same decomposition as the paper's Table III.
 resident fused path: spatial kNN via the ``knn_topk`` kernel + profile
 cross-correlation weights, points→labels under a single jit
 (``SpectralPipeline.run`` on raw points, with ``GraphConfig.knn_k`` and a
-separate ``points=`` search space).
+separate ``points=`` search space).  ``--graph-method lsh`` additionally
+swaps the exact O(n²d) neighbor search for LSH candidate generation +
+exact rerank (O(n·m·d) — the paper-scale 142k-voxel regime; DESIGN.md §12).
 """
 import argparse
 import time
@@ -35,9 +37,15 @@ def main() -> None:
     ap.add_argument("--device-stage1", action="store_true",
                     help="device-resident Stage 1 (kNN kernel), points→labels in one jit")
     ap.add_argument("--knn", type=int, default=16, help="neighbors per voxel (device Stage 1)")
+    ap.add_argument("--graph-method", choices=("exact", "lsh"), default="exact",
+                    help="device Stage-1 neighbor search: exact O(n²d) kernel "
+                         "or LSH candidates + exact rerank (n ≫ 100k)")
     ap.add_argument("--kmeans-iter", choices=("fused", "two_pass"), default="fused",
                     help="Stage-3 Lloyd engine (fused = one data stream/iter)")
     args = ap.parse_args()
+    if args.graph_method == "lsh" and not args.device_stage1:
+        ap.error("--graph-method lsh requires --device-stage1 (the host "
+                 "ε-edge path has no LSH front-end)")
     n = 142541 if args.full else args.n
     k = 500 if args.full else args.clusters
 
@@ -53,7 +61,8 @@ def main() -> None:
 
     pipe = SpectralPipeline(
         n_clusters=k,
-        graph=GraphConfig(knn_k=args.knn, measure="cross_correlation"),
+        graph=GraphConfig(knn_k=args.knn, measure="cross_correlation",
+                          method=args.graph_method),
         eig=EigConfig(tol=1e-4),
         kmeans=KMeansConfig(iter=args.kmeans_iter),
     )

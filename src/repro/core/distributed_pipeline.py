@@ -30,7 +30,13 @@ import repro.core.kmeans as km
 from repro.compat import SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.core.pipeline import SpectralClusteringConfig
 from repro.core.spectral import GraphConfig, Plan, SpectralResult
-from repro.kernels.knn_topk.ops import knn_topk
+from repro.kernels.knn_topk.ops import knn_topk, knn_topk_rerank
+from repro.kernels.lsh_candidates.ops import (
+    DEFAULT_N_BITS,
+    DEFAULT_N_TABLES,
+    default_candidates,
+    lsh_candidates,
+)
 from repro.sparse.distributed import (  # noqa: F401  (normalize_sharded re-export)
     ShardedCOO,
     normalize_sharded,
@@ -48,7 +54,10 @@ def _axis_size(mesh, axis) -> int:
 
 
 def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
-                      impl: str = "auto", interpret: Optional[bool] = None):
+                      impl: str = "auto", interpret: Optional[bool] = None,
+                      method: str = "exact", n_tables: int = DEFAULT_N_TABLES,
+                      n_bits: int = DEFAULT_N_BITS,
+                      candidates: Optional[int] = None, lsh_seed: int = 0):
     """Row-block-sharded Stage-1 neighbor search (the kNN analogue of
     :func:`repro.sparse.distributed.make_sharded_spmv`'s layout).
 
@@ -63,9 +72,21 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
     kernel per shard on TPU (or under ``interpret``), the jnp reference
     elsewhere.
 
+    ``method="lsh"`` swaps the per-shard O(n·n_local·d) exact sweep for LSH
+    candidate generation + exact rerank over the *gathered* pool: every
+    shard hashes the full point set (the hyperplanes derive from the static
+    ``lsh_seed``, so all shards build identical tables — redundant O(n·d·
+    n_tables·n_bits) compute, the same replicate-the-cheap-part discipline
+    as graph assembly) and windows/reranks only its own rows' candidates,
+    making the per-shard cost O(n·d·T·b + T·n log n + n_local·m·d).
+
     Returns ``knn(x) -> (dist² [n, k], idx [n, k])`` with rows sharded over
     ``axis``; outputs feed :func:`repro.core.similarity.graph_from_knn`.
     """
+    if method not in ("exact", "lsh"):
+        raise ValueError(
+            f"make_knn_rowblock method must be 'exact'|'lsh', got {method!r}")
+    m = default_candidates(k, n_tables) if candidates is None else candidates
 
     @partial(
         _shard_map,
@@ -79,6 +100,14 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
     def knn(x_blk):
         x_full = jax.lax.all_gather(x_blk, axis, axis=0, tiled=True)
         offset = jax.lax.axis_index(axis) * x_blk.shape[0]
+        if method == "lsh":
+            qrows = offset + jnp.arange(x_blk.shape[0], dtype=jnp.int32)
+            cand = lsh_candidates(x_full, m=m, n_tables=n_tables,
+                                  n_bits=n_bits, seed=lsh_seed,
+                                  query_rows=qrows, impl=impl,
+                                  interpret=interpret)
+            return knn_topk_rerank(x_full, cand, k, queries=x_blk,
+                                   query_rows=qrows, block_q=block_q)
         return knn_topk(x_full, k, queries=x_blk, query_offset=offset,
                         block_q=block_q, impl=impl, interpret=interpret)
 

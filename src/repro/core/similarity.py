@@ -28,13 +28,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.knn_topk.ops import knn_topk
+from repro.kernels.knn_topk.ops import knn_topk, knn_topk_rerank
+from repro.kernels.lsh_candidates.ops import (
+    DEFAULT_N_BITS,
+    DEFAULT_N_TABLES,
+    default_candidates,
+    lsh_candidates,
+)
 from repro.sparse.formats import COO, coo_from_edges
 from repro.sparse.ops import sort_coo_rows, symmetrize_coo
 
 Array = jax.Array
 
 Measure = Literal["cosine", "cross_correlation", "exp_decay"]
+Method = Literal["exact", "lsh"]
 
 
 def _center_and_norms(x: Array, measure: Measure) -> Tuple[Array, Array]:
@@ -180,24 +187,56 @@ def build_knn_graph(
     sigma: float = 1.0,
     eps: Array | float | None = None,
     clip_negative: bool = True,
+    method: Method = "exact",
+    n_tables: int = DEFAULT_N_TABLES,
+    n_bits: int = DEFAULT_N_BITS,
+    candidates: Optional[int] = None,
+    lsh_seed: int = 0,
     impl: str = "auto",
-    block_q: int = 256,
-    block_k: int = 256,
+    block_q: Optional[int] = None,  # None → per-method default (256 exact
+    block_k: Optional[int] = None,  # search tile, 1024 rerank chunk)
     interpret: bool | None = None,
 ) -> COO:
-    """End-to-end device Stage 1: fused kNN search → similarity → symmetric
+    """End-to-end device Stage 1: kNN search → similarity → symmetric
     row-sorted COO.  jit-safe (static nnz = 2·n·k); no host neighbor loop.
+
+    ``method`` selects the neighbor search: ``"exact"`` is the fused O(n²d)
+    ``knn_topk`` kernel (bitwise-unchanged default); ``"lsh"`` generates
+    bounded candidate sets of size ``candidates = m ≪ n`` by random-
+    hyperplane hashing (``kernels/lsh_candidates``) and reranks them with
+    the exact ``knn_topk_rerank`` — O(n·m·d), the n ≫ 100k regime where the
+    quadratic search dominates the pipeline (DESIGN.md §12).  ``n_tables``/
+    ``n_bits``/``candidates``/``lsh_seed`` are the LSH recall knobs
+    (``candidates=None`` → ``default_candidates(k, n_tables)``); low-recall
+    rows degrade to fewer-than-k neighbors, never to wrong distances — the
+    rerank is exact over the candidates it is fed.
 
     ``points`` optionally separates the neighbor-search space from the
     similarity features (the paper's DTI workflow: spatial ε/kNN neighbors,
     cross-correlation of connectivity profiles as weights).  ``eps`` turns
     the kNN search into a degree-capped ε-ball (neighbors beyond the radius
     are dropped).  With ``measure="exp_decay"`` and ``points=None`` the
-    kernel's distances are reused directly — no second gather pass.
+    search distances are reused directly — no second gather pass.
     """
     p = x if points is None else points
-    dist2, idx = knn_topk(p, k, impl=impl, block_q=block_q, block_k=block_k,
-                          interpret=interpret)
+    if points is not None and points.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"points rows ({points.shape[0]}) must match feature rows "
+            f"({x.shape[0]}) — one search point per feature row")
+    if method == "lsh":
+        m = default_candidates(k, n_tables) if candidates is None else candidates
+        cand = lsh_candidates(p, m=m, n_tables=n_tables, n_bits=n_bits,
+                              seed=lsh_seed, impl=impl, interpret=interpret)
+        # eps masking is left to graph_from_knn, same as the exact branch
+        dist2, idx = knn_topk_rerank(p, cand, k, block_q=block_q or 1024)
+    elif method == "exact":
+        # NB: eps is NOT threaded into the search here — graph_from_knn
+        # applies the radius mask, exactly as before the method= split
+        # (keeps the exact path bitwise-unchanged)
+        dist2, idx = knn_topk(p, k, impl=impl, block_q=block_q or 256,
+                              block_k=block_k or 256, interpret=interpret)
+    else:  # pragma: no cover - guarded by Literal / GraphConfig validation
+        raise ValueError(f"unknown method {method!r} (expected 'exact'|'lsh')")
     return graph_from_knn(x, dist2, idx, measure=measure, sigma=sigma, eps=eps,
                           clip_negative=clip_negative,
                           dist2_in_x_space=points is None)

@@ -40,6 +40,11 @@ import repro.core.lanczos as lz
 import repro.core.laplacian as lap
 from repro.compat import needs_argsort_gather_workaround
 from repro.core.operator import CooOperator, LinearOperator, ShardedCooOperator
+from repro.kernels.lsh_candidates.ops import (
+    DEFAULT_N_BITS as _DEFAULT_LSH_BITS,
+    DEFAULT_N_TABLES as _DEFAULT_LSH_TABLES,
+    MAX_N_BITS as _MAX_LSH_BITS,
+)
 from repro.core.similarity import build_knn_graph, graph_from_knn
 from repro.sparse.distributed import ShardedCOO, normalize_sharded, spmv_gspmd
 from repro.sparse.formats import COO
@@ -49,6 +54,7 @@ Array = jax.Array
 KMeansConfig = km.KMeansConfig  # the Stage-3 nested config (re-exported)
 
 _MEASURES = ("cosine", "cross_correlation", "exp_decay")
+_METHODS = ("exact", "lsh")
 _KNN_IMPLS = ("auto", "pallas", "ref")
 _DEVICES = ("single", "sharded")
 _VARIANTS = ("gspmd", "shard_map")
@@ -79,6 +85,13 @@ def default_basis_size(n: int, k: int, b: int = 1) -> int:
 class GraphConfig:
     """Stage-1 knobs (kNN similarity-graph construction, paper Alg. 1).
 
+    ``method`` selects the neighbor search: ``"exact"`` (default, the fused
+    O(n²d) ``knn_topk`` kernel) or ``"lsh"`` (random-hyperplane candidate
+    generation + exact rerank, O(n·m·d) — the n ≫ 100k regime; DESIGN.md
+    §12).  ``n_tables``/``n_bits``/``candidates``/``lsh_seed`` are the LSH
+    recall knobs; ``candidates=None`` derives m from ``knn_k``/``n_tables``
+    (:func:`repro.kernels.lsh_candidates.ops.default_candidates`).
+
     ``block_q``/``block_k`` default to the per-path kernel tile choices
     (256 on the single-device search, 1024 rows/shard on the row-block
     sharded search) when left ``None``.
@@ -88,6 +101,11 @@ class GraphConfig:
     measure: str = "exp_decay"  # "cosine" | "cross_correlation" | "exp_decay"
     sigma: float = 1.0
     eps: Union[float, Array, None] = None  # degree-capped ε-ball radius
+    method: str = "exact"  # neighbor search: "exact" | "lsh"
+    n_tables: int = _DEFAULT_LSH_TABLES  # LSH hash tables (recall ∝ union)
+    n_bits: int = _DEFAULT_LSH_BITS  # hyperplane bits/table (bucket resolution)
+    candidates: Optional[int] = None  # per-query candidate budget m; None=auto
+    lsh_seed: int = 0  # hyperplane PRNG seed (static, serializable)
     impl: str = "auto"  # knn_topk dispatch: "auto" | "pallas" | "ref"
     block_q: Optional[int] = None
     block_k: Optional[int] = None
@@ -98,12 +116,27 @@ class GraphConfig:
             raise ValueError(
                 f"GraphConfig.measure must be one of {_MEASURES}, got "
                 f"{self.measure!r}")
+        if self.method not in _METHODS:
+            raise ValueError(
+                f"GraphConfig.method must be one of {_METHODS} (neighbor-"
+                f"search dispatch), got {self.method!r}")
         if self.impl not in _KNN_IMPLS:
             raise ValueError(
                 f"GraphConfig.impl must be one of {_KNN_IMPLS} (knn_topk "
                 f"kernel dispatch), got {self.impl!r}")
         if self.knn_k < 1:
             raise ValueError(f"GraphConfig.knn_k must be >= 1, got {self.knn_k}")
+        if self.n_tables < 1:
+            raise ValueError(
+                f"GraphConfig.n_tables must be >= 1, got {self.n_tables}")
+        if not 1 <= self.n_bits <= _MAX_LSH_BITS:
+            raise ValueError(
+                f"GraphConfig.n_bits must be in [1, {_MAX_LSH_BITS}] (codes "
+                f"pack into fp32-exact int32), got {self.n_bits}")
+        if self.candidates is not None and self.candidates < self.n_tables:
+            raise ValueError(
+                f"GraphConfig.candidates={self.candidates} < n_tables="
+                f"{self.n_tables} — each table needs a window of at least 1")
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -302,36 +335,42 @@ class SpectralPipeline:
                           inv_sqrt_deg=g.inv_sqrt_deg)
 
     def build_graph(self, x: Array, *, points: Optional[Array] = None) -> GraphState:
-        """Stage 1 from raw points: fused kNN search → similarity → normalized
-        COO.  Under ``Plan(device="sharded")`` the O(n²d) neighbor search runs
+        """Stage 1 from raw points: kNN search → similarity → normalized
+        COO.  Under ``Plan(device="sharded")`` the neighbor search — O(n²d)
+        exact or O(n·m·d) LSH-reranked, per ``graph.method`` — runs
         row-block-parallel over the mesh; assembly and normalization stay on
         the plain jit path (their cost is O(nk)).
 
         ``points`` optionally separates the neighbor-search coordinates from
-        the similarity features (DTI: spatial kNN, profile cross-correlation).
+        the similarity features (DTI: spatial kNN, profile cross-correlation)
+        on both plans — the sharded path searches the row-block-sharded
+        ``points`` and weighs edges from the gathered ``x`` features.
         """
         g = self.graph
         if self.plan.device == "sharded":
+            # the single-device branch delegates this check to build_knn_graph
+            if points is not None and points.shape[0] != x.shape[0]:
+                raise ValueError(
+                    f"points rows ({points.shape[0]}) must match feature rows "
+                    f"({x.shape[0]}) — one search point per feature row")
             if self.plan.mesh is None:
                 raise ValueError(
                     "Plan(device='sharded') needs a mesh for the row-block "
                     "Stage 1 (build_graph)")
             from repro.core.distributed_pipeline import make_knn_rowblock
 
-            if points is not None:
-                raise NotImplementedError(
-                    "separate search points are not yet threaded through the "
-                    "row-block sharded Stage 1 — pass them on the single-"
-                    "device plan")
-            n = x.shape[0]
+            p = x if points is None else points
+            n = p.shape[0]
             axis = self.plan.axis
             axis = axis if isinstance(axis, str) else axis[0]
             n_shards = self.plan.mesh.shape[axis]
             assert n % n_shards == 0, (n, n_shards)
             knn = make_knn_rowblock(
                 self.plan.mesh, g.knn_k, axis=axis,
-                block_q=g.block_q or 1024, impl=g.impl, interpret=g.interpret)
-            dist2, idx = knn(x)
+                block_q=g.block_q or 1024, impl=g.impl, interpret=g.interpret,
+                method=g.method, n_tables=g.n_tables, n_bits=g.n_bits,
+                candidates=g.candidates, lsh_seed=g.lsh_seed)
+            dist2, idx = knn(p)
             if needs_argsort_gather_workaround():
                 # Re-replicate the small [n, k] search results before graph
                 # assembly: the O(n²d) work was the sharded part; assembly is
@@ -346,12 +385,13 @@ class SpectralPipeline:
                 dist2 = jax.lax.with_sharding_constraint(dist2, rep)
                 idx = jax.lax.with_sharding_constraint(idx, rep)
             w = graph_from_knn(x, dist2, idx, measure=g.measure, sigma=g.sigma,
-                               eps=g.eps)
+                               eps=g.eps, dist2_in_x_space=points is None)
             return self.prepare(w)
         w = build_knn_graph(
             x, g.knn_k, points=points, measure=g.measure, sigma=g.sigma,
-            eps=g.eps, impl=g.impl, block_q=g.block_q or 256,
-            block_k=g.block_k or 256, interpret=g.interpret)
+            eps=g.eps, method=g.method, n_tables=g.n_tables, n_bits=g.n_bits,
+            candidates=g.candidates, lsh_seed=g.lsh_seed, impl=g.impl,
+            block_q=g.block_q, block_k=g.block_k, interpret=g.interpret)
         return self.prepare(w)
 
     # -- Stage 2 ------------------------------------------------------------

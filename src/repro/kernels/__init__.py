@@ -9,6 +9,9 @@ Each kernel package ships three files:
 Kernels:
   knn_topk      — fused pairwise-distance + online top-k (Stage 1 hot op:
                   device-resident kNN graph construction, no n×n matrix).
+  lsh_candidates— random-hyperplane LSH hashing + candidate windowing (the
+                  approximate Stage-1 front-end; candidates feed the exact
+                  knn_topk_rerank, O(n²d) → O(n·m·d)).
   kmeans_assign — fused pairwise-distance + online argmin (Stage 3 hot op).
   ell_spmv      — blocked-ELL SpMV (Stage 2 hot op, single vector).
   ell_spmm      — blocked-ELL multi-vector SpMM (Stage 2 hot op in block-

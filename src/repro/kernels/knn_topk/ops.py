@@ -85,3 +85,76 @@ def knn_topk(
         dist = jnp.where(beyond, jnp.inf, dist)
         idx = jnp.where(beyond, -1, idx)
     return dist, idx
+
+
+@partial(jax.jit, static_argnames=("k", "block_q"))
+def knn_topk_rerank(
+    x: jax.Array,  # [n, d] candidate pool
+    cand: jax.Array,  # [nq, m] int32 candidate ids (−1 = padding), unique/row
+    k: int,
+    *,
+    queries: jax.Array | None = None,  # [nq, d]; defaults to x (cand is [n, m])
+    query_rows: jax.Array | None = None,  # [nq] global ids; default arange(nq)
+    eps: jax.Array | float | None = None,
+    block_q: int = 1024,
+):
+    """Exact top-k over bounded per-query candidate sets — the rerank stage of
+    the approximate Stage 1.  Same output contract as :func:`knn_topk`
+    (dist² ascending, idx int32, invalid slots (+inf, −1)); only the
+    *candidate supply* differs: the ``m ≪ n`` ids in ``cand`` (from
+    ``repro.kernels.lsh_candidates``) instead of all n points, so the
+    distance work drops from O(n²d) to O(n·m·d).
+
+    Reuses ``knn_topk``'s BLAS identity per row over the gathered candidates
+    (‖q‖² + ‖c‖² − 2 q·c, a [nq, d] × [nq, m, d] batched contraction the MXU
+    streams) — there is no Pallas kernel here because the irregular gather
+    ``x[cand]`` is already XLA-native and the arithmetic is dense.  ``cand``
+    rows must be duplicate-free (the ``lsh_candidates`` contract): top-k
+    over a row with repeated ids would report the same neighbor twice.
+
+    Slots where a row has fewer than k valid candidates (or beyond ``eps``)
+    come back (+inf, −1) — downstream ``graph_from_knn`` masks them to
+    zero-weight self edges, so low-recall rows degrade instead of failing.
+    """
+    xf = x.astype(jnp.float32)
+    cn = (xf * xf).sum(1)
+    q = xf if queries is None else queries.astype(jnp.float32)
+    nq, m = q.shape[0], cand.shape[1]
+    assert cand.shape[0] == nq, (cand.shape, q.shape)
+    qrow = (jnp.arange(nq, dtype=jnp.int32) if query_rows is None
+            else query_rows.astype(jnp.int32))
+    qn = (q * q).sum(1)
+    ko = min(k, m)
+
+    def body(args):
+        qb, qnb, rb, cb = args  # [bq, d], [bq], [bq], [bq, m]
+        valid = (cb >= 0) & (cb != rb[:, None])
+        safe = jnp.where(cb >= 0, cb, 0)
+        d2 = (qnb[:, None] + cn[safe]
+              - 2.0 * jnp.einsum("qd,qmd->qm", qb, xf[safe],
+                                 preferred_element_type=jnp.float32))
+        d2 = jnp.where(valid, jnp.maximum(d2, 0.0), jnp.inf)
+        neg, sel = jax.lax.top_k(-d2, ko)  # ties → lowest pos = smallest id
+        return -neg, jnp.take_along_axis(safe, sel, axis=1)
+
+    # chunk queries with lax.map so only a [bq, m, d] gather tile is live
+    bq = min(block_q, nq)
+    pad = (-nq) % bq
+    qp = _pad_to(q, nq + pad, 0)
+    qnp_ = _pad_to(qn, nq + pad, 0)
+    rp = _pad_to(qrow, nq + pad, 0, value=-2)  # never matches a candidate id
+    cp = _pad_to(cand.astype(jnp.int32), nq + pad, 0, value=-1)
+    d_blk, i_blk = jax.lax.map(
+        body, (qp.reshape(-1, bq, q.shape[1]), qnp_.reshape(-1, bq),
+               rp.reshape(-1, bq), cp.reshape(-1, bq, m)))
+    dist = d_blk.reshape(-1, ko)[:nq]
+    idx = i_blk.reshape(-1, ko)[:nq]
+    idx = jnp.where(jnp.isinf(dist), -1, idx)  # canonicalize invalid slots
+    if ko < k:  # fewer candidates than requested neighbors
+        dist = jnp.pad(dist, ((0, 0), (0, k - ko)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - ko)), constant_values=-1)
+    if eps is not None:
+        beyond = dist > jnp.asarray(eps, jnp.float32) ** 2
+        dist = jnp.where(beyond, jnp.inf, dist)
+        idx = jnp.where(beyond, -1, idx)
+    return dist, idx

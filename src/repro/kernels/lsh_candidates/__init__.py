@@ -1,0 +1,7 @@
+from repro.kernels.lsh_candidates.ops import (  # noqa: F401
+    default_candidates,
+    hash_codes,
+    lsh_candidates,
+    make_planes,
+)
+from repro.kernels.lsh_candidates.ref import hash_codes_ref  # noqa: F401

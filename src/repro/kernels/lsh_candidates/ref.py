@@ -1,0 +1,38 @@
+"""jnp reference for the LSH hashing kernel (and the CPU/GPU fallback).
+
+Same contract as :func:`repro.kernels.lsh_candidates.ops.hash_codes` — per
+table, project every point onto ``n_bits`` random hyperplanes through the
+origin, take the sign pattern as a packed integer bucket code, and emit one
+extra *tie-break* projection per table.  The tie-break is load-bearing for
+the candidate windowing in :func:`repro.kernels.lsh_candidates.ops
+.lsh_candidates`: sorting a table lexicographically by (code, tie-break)
+gives bucket grouping whose *within-bucket* order follows a 1-D random
+projection instead of point index, so a fixed-size window around a query's
+sorted position resolves locality even inside large buckets (tight clusters
+far from the origin hash to one bucket; without the tie-break the window
+samples that bucket uniformly and recall collapses — measured 0.39 → 0.99
+at n=4k, see DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def hash_codes_ref(x: Array, planes: Array) -> tuple[Array, Array]:
+    """(codes [T, n] int32, tie [T, n] f32) from points [n, d] and hyperplane
+    normals ``planes`` [T, d, n_bits + 1].
+
+    Column ``n_bits`` (the last) of each table's plane block is the tie-break
+    direction; columns ``0..n_bits-1`` contribute sign bits packed little-
+    endian (bit j = 1 iff x·planes[t, :, j] ≥ 0).  One [n, d] × [d, n_bits+1]
+    GEMM per table serves both outputs — exactly what the Pallas kernel does
+    on the MXU.
+    """
+    proj = jnp.einsum("nd,tdb->tnb", x.astype(jnp.float32),
+                      planes.astype(jnp.float32))  # [T, n, n_bits+1]
+    bits = (proj[..., :-1] >= 0).astype(jnp.int32)
+    pows = jnp.left_shift(1, jnp.arange(bits.shape[-1], dtype=jnp.int32))
+    return (bits * pows).sum(-1), proj[..., -1]

@@ -109,6 +109,53 @@ def test_sharded_points_stage1_matches_single_device():
     """))
 
 
+def test_sharded_stage1_separate_points_matches_single_device():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.spectral import GraphConfig, Plan, SpectralPipeline
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        n, d = 256, 12
+        pos = rng.normal(size=(n, 3)).astype(np.float32)   # search space
+        prof = rng.normal(size=(n, d)).astype(np.float32)  # feature space
+        g = GraphConfig(knn_k=6, measure="cross_correlation")
+        key = jax.random.PRNGKey(0)
+        single = SpectralPipeline(n_clusters=4, graph=g)
+        sharded = SpectralPipeline(n_clusters=4, graph=g,
+                                   plan=Plan(device="sharded", mesh=mesh))
+        out1 = single.run(jnp.asarray(prof), key, points=jnp.asarray(pos))
+        out2 = sharded.run(jnp.asarray(prof), key, points=jnp.asarray(pos))
+        np.testing.assert_array_equal(np.asarray(out1.labels),
+                                      np.asarray(out2.labels))
+        np.testing.assert_allclose(np.asarray(out1.eigenvalues),
+                                   np.asarray(out2.eigenvalues),
+                                   rtol=1e-5, atol=1e-6)
+        print("POINTS-SEPARATE-OK")
+    """))
+
+
+def test_sharded_stage1_lsh_matches_single_device():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed_pipeline import make_knn_rowblock
+        from repro.kernels.knn_topk.ops import knn_topk_rerank
+        from repro.kernels.lsh_candidates.ops import (default_candidates,
+            lsh_candidates)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(1)
+        n, d, k = 256, 8, 6
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        # per-shard hash tables over the gathered pool == single-device tables
+        d_sh, i_sh = jax.jit(make_knn_rowblock(mesh, k, method="lsh"))(x)
+        cand = lsh_candidates(x, m=default_candidates(k))
+        d_1, i_1 = knn_topk_rerank(x, cand, k)
+        np.testing.assert_allclose(np.asarray(d_sh), np.asarray(d_1),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i_sh), np.asarray(i_1))
+        print("LSH-ROWBLOCK-OK")
+    """))
+
+
 def test_sharded_kmeans_matches_single_device_and_one_allreduce_per_iter():
     print(_run("""
         import numpy as np, jax, jax.numpy as jnp

@@ -1,0 +1,257 @@
+"""ANN Stage-1 correctness harness: LSH hashing kernel parity (interpret vs
+ref), candidate-set contract, duplicate points, seeded recall@k bounds, and
+end-to-end ARI parity of ``method="lsh"`` vs the exact path on blob + SBM
+data.  These gates are what make the approximate Stage 1 mergeable — the
+rerank is exact over the candidates it is fed, so the *only* failure mode
+is candidate recall, and recall is pinned here."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.similarity import build_knn_graph
+from repro.core.spectral import GraphConfig, SpectralPipeline
+from repro.kernels.knn_topk.ops import knn_topk, knn_topk_rerank
+from repro.kernels.lsh_candidates.ops import (
+    default_candidates,
+    hash_codes,
+    lsh_candidates,
+    make_planes,
+)
+from repro.kernels.lsh_candidates.ref import hash_codes_ref
+
+
+def _clustered_gaussians(n, d, n_clusters, *, scale=4.0, seed=0):
+    """Seeded clustered Gaussians — the recall-gate dataset (tight clusters
+    far from the origin: the adversarial case for origin-hyperplane LSH,
+    which the tie-break windowing is there to survive; DESIGN.md §12)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * scale
+    x = centers[rng.integers(0, n_clusters, n)]
+    return (x + rng.normal(size=(n, d)).astype(np.float32)).astype(np.float32)
+
+
+def adjusted_rand_index(a, b) -> float:
+    """ARI from the contingency table (no sklearn in the container)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n = a.shape[0]
+    _, ai = np.unique(a, return_inverse=True)
+    _, bi = np.unique(b, return_inverse=True)
+    cont = np.zeros((ai.max() + 1, bi.max() + 1), np.int64)
+    np.add.at(cont, (ai, bi), 1)
+    comb = lambda x: x * (x - 1) / 2.0
+    sum_ij = comb(cont).sum()
+    sum_a = comb(cont.sum(1)).sum()
+    sum_b = comb(cont.sum(0)).sum()
+    expected = sum_a * sum_b / comb(n)
+    max_idx = (sum_a + sum_b) / 2.0
+    if max_idx == expected:
+        return 1.0
+    return float((sum_ij - expected) / (max_idx - expected))
+
+
+# ---------------------------------------------------------------------------
+# Hashing kernel: interpret-mode Pallas vs jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,t,b,bn", [
+    (256, 8, 4, 12, 128),   # exact tiling
+    (100, 8, 2, 16, 128),   # n not a block multiple
+    (257, 130, 3, 8, 128),  # n and d both ragged (d pads to 256)
+    (64, 5, 1, 24, 128),    # single table, max bits
+    (300, 16, 5, 20, 256),  # larger block than needed
+])
+def test_hash_codes_interpret_matches_ref(n, d, t, b, bn):
+    x = jnp.asarray(np.random.default_rng(n + d + t)
+                    .normal(size=(n, d)).astype(np.float32))
+    planes = make_planes(d, t, b, seed=n)
+    c_ref, tie_ref = hash_codes_ref(x, planes)
+    c_pal, tie_pal = hash_codes(x, planes, impl="pallas", interpret=True,
+                                block_n=bn)
+    np.testing.assert_array_equal(np.asarray(c_pal), np.asarray(c_ref))
+    np.testing.assert_allclose(np.asarray(tie_pal), np.asarray(tie_ref),
+                               rtol=1e-5, atol=1e-5)
+    codes = np.asarray(c_ref)
+    assert codes.dtype == np.int32
+    assert (codes >= 0).all() and (codes < 2 ** b).all()
+
+
+@pytest.mark.parametrize("impl,kw", [
+    ("ref", {}),
+    ("pallas", dict(interpret=True)),
+])
+def test_candidate_set_contract(impl, kw):
+    """[nq, m] int32; valid ids unique, strictly ascending, in range, the
+    query itself never present; invalid slots are −1 (possibly interspersed
+    — duplicates are masked in place, not compacted)."""
+    n, d, m = 150, 6, 40
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(n, d)).astype(np.float32))
+    cand = np.asarray(lsh_candidates(x, m=m, n_tables=4, n_bits=10,
+                                     impl=impl, **kw))
+    assert cand.shape == (n, m) and cand.dtype == np.int32
+    assert (cand >= -1).all()
+    for i in range(n):
+        row = cand[i]
+        valid = row[row >= 0]
+        assert i not in valid
+        assert (valid < n).all()
+        assert (np.diff(valid) > 0).all()  # strictly ascending == unique
+
+
+def test_candidates_m_not_multiple_of_tables():
+    """m that doesn't divide by n_tables pads the remainder with −1."""
+    x = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=(64, 4)).astype(np.float32))
+    cand = np.asarray(lsh_candidates(x, m=37, n_tables=5, n_bits=8))
+    assert cand.shape == (64, 37)
+    assert (cand >= -1).all() and (cand < 64).all()
+
+
+def test_small_pool_window_covers_everything():
+    """n smaller than the per-table window: candidates = all other points,
+    so the rerank degenerates to the exact search."""
+    n, k = 12, 5
+    x = jnp.asarray(np.random.default_rng(2)
+                    .normal(size=(n, 3)).astype(np.float32))
+    cand = lsh_candidates(x, m=64, n_tables=2, n_bits=8)
+    d_rr, i_rr = knn_topk_rerank(x, cand, k)
+    d_ex, i_ex = knn_topk(x, k, impl="ref")
+    np.testing.assert_allclose(np.asarray(d_rr), np.asarray(d_ex),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_rr), np.asarray(i_ex))
+
+
+@pytest.mark.parametrize("impl,kw", [
+    ("ref", {}),
+    ("pallas", dict(interpret=True)),
+])
+def test_duplicate_points(impl, kw):
+    """Exact twins hash identically and sort adjacently (stable tie-break),
+    so each twin's candidate set contains the others; the rerank must then
+    report them at distance 0 without self-pairs or repeated ids."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(30, 5)).astype(np.float32)
+    x = np.concatenate([base, base, base])  # every point has 2 exact twins
+    n, k = x.shape[0], 5
+    xj = jnp.asarray(x)
+    cand = lsh_candidates(xj, m=60, n_tables=6, n_bits=10, impl=impl, **kw)
+    dist, idx = knn_topk_rerank(xj, cand, k)
+    dist, idx = np.asarray(dist), np.asarray(idx)
+    assert (idx != np.arange(n)[:, None]).all()
+    for r in range(n):
+        got = idx[r][idx[r] >= 0]
+        assert len(set(got.tolist())) == len(got)
+    # the two twins are the nearest neighbors, at distance 0
+    np.testing.assert_allclose(dist[:, :2], 0.0, atol=1e-5)
+
+
+def test_query_rows_subset_matches_full():
+    """The sharded entry: candidates for a row block against the full pool
+    must equal the corresponding rows of the all-queries call, including
+    under jit with a traced offset (one compiled fn serves every shard)."""
+    n, d, m = 120, 6, 48
+    x = jnp.asarray(np.random.default_rng(4)
+                    .normal(size=(n, d)).astype(np.float32))
+    full = np.asarray(lsh_candidates(x, m=m, n_tables=4, n_bits=12))
+    fn = jax.jit(lambda xx, qr: lsh_candidates(xx, m=m, n_tables=4, n_bits=12,
+                                               query_rows=qr))
+    for off, nq in ((0, 30), (30, 30), (90, 30)):
+        rows = jnp.asarray(off) + jnp.arange(nq, dtype=jnp.int32)
+        blk = np.asarray(fn(x, rows))
+        np.testing.assert_array_equal(blk, full[off:off + nq])
+
+
+# ---------------------------------------------------------------------------
+# Recall gate (the merge gate for the approximate Stage 1)
+# ---------------------------------------------------------------------------
+
+def test_recall_at_k_seeded_clustered_gaussians():
+    """recall@k ≥ 0.95 at n=4k with the *default* knobs — the acceptance
+    bound this PR is gated on.  Seeded end to end, so the measured value
+    (≈ 0.99) is deterministic; a regression below 0.95 means the hashing or
+    windowing changed behaviorally, not that the dice rolled badly."""
+    n, d, k = 4000, 16, 10
+    x = jnp.asarray(_clustered_gaussians(n, d, 10, seed=0))
+    m = default_candidates(k)  # the knob the docstring promises passes here
+    cand = lsh_candidates(x, m=m)
+    dist, idx = knn_topk_rerank(x, cand, k)
+    d_ex, i_ex = knn_topk(x, k, impl="ref")
+    got, want = np.asarray(idx), np.asarray(i_ex)
+    hits = sum(len(set(got[i].tolist()) & set(want[i].tolist()))
+               for i in range(n))
+    recall = hits / (n * k)
+    assert recall >= 0.95, recall
+    # exactness of the rerank: reported neighbors carry true distances
+    xn = np.asarray(x)
+    sel = np.where(got >= 0, got, 0)
+    true_d = ((xn[:, None, :] - xn[sel]) ** 2).sum(-1)
+    dd = np.asarray(dist)
+    fin = np.isfinite(dd)
+    np.testing.assert_allclose(dd[fin], true_d[fin], rtol=1e-3, atol=1e-3)
+
+
+def test_lsh_graph_contract_matches_exact_shape():
+    """method='lsh' emits the same static COO layout as exact (nnz = 2nk,
+    sorted rows, symmetric) — the jit contract downstream stages rely on."""
+    n, k = 200, 6
+    x = jnp.asarray(np.random.default_rng(5)
+                    .normal(size=(n, 8)).astype(np.float32))
+    w = build_knn_graph(x, k, measure="exp_decay", method="lsh",
+                        n_tables=8, n_bits=12)
+    assert w.nnz == 2 * n * k
+    assert w.sorted_rows is True
+    r, c, v = np.asarray(w.row), np.asarray(w.col), np.asarray(w.val)
+    assert (np.diff(r) >= 0).all()
+    dense = np.zeros((n, n))
+    np.add.at(dense, (r, c), v)
+    np.testing.assert_allclose(dense, dense.T, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end ARI parity: method="lsh" vs the exact path
+# ---------------------------------------------------------------------------
+
+def _ari_parity(x, truth, n_clusters, graph_kw, min_ratio=0.99):
+    from repro.core.spectral import EigConfig
+
+    key = jax.random.PRNGKey(0)
+    # block Lanczos: well-separated clusters make the graph (nearly)
+    # disconnected, and the multiplicity needs a Krylov block (DESIGN.md §3)
+    eig = EigConfig(block_size=4)
+    exact = SpectralPipeline(
+        n_clusters=n_clusters, eig=eig,
+        graph=GraphConfig(**graph_kw)).run(x, key)
+    lsh = SpectralPipeline(
+        n_clusters=n_clusters, eig=eig,
+        graph=GraphConfig(method="lsh", **graph_kw)).run(x, key)
+    ari_exact = adjusted_rand_index(truth, np.asarray(exact.labels))
+    ari_lsh = adjusted_rand_index(truth, np.asarray(lsh.labels))
+    assert ari_exact > 0.9, ari_exact  # the baseline itself must work
+    assert ari_lsh >= min_ratio * ari_exact, (ari_lsh, ari_exact)
+
+
+def test_e2e_ari_parity_blobs():
+    rng = np.random.default_rng(0)
+    kb, n_per, d = 4, 128, 8
+    centers = (rng.permutation(np.eye(kb, d)) * 20.0).astype(np.float32)
+    x = np.concatenate(
+        [c + rng.normal(size=(n_per, d)) for c in centers]).astype(np.float32)
+    truth = np.repeat(np.arange(kb), n_per)
+    _ari_parity(jnp.asarray(x), truth, kb, dict(knn_k=8, sigma=2.0))
+
+
+def test_e2e_ari_parity_sbm_rows():
+    """SBM adjacency rows as points: same-block rows are near in Euclidean
+    distance (shared in-block neighborhoods), so Stage 1 over the rows must
+    recover the planted partition — through both search methods."""
+    from repro.data.sbm import sbm_graph
+
+    coo, truth = sbm_graph(128, 4, 0.35, 0.02, seed=7)
+    n = coo.shape[0]
+    dense = np.zeros((n, n), np.float32)
+    np.add.at(dense, (np.asarray(coo.row), np.asarray(coo.col)),
+              np.asarray(coo.val))
+    _ari_parity(jnp.asarray(dense), truth, 4,
+                dict(knn_k=10, measure="cosine"))

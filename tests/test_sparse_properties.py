@@ -1,0 +1,92 @@
+"""Property-based COO invariants (hypothesis; deterministic stub fallback).
+
+These invariants are load-bearing for the Stage-1 rerank output path:
+``graph_from_knn`` = similarity → ``symmetrize_coo`` → ``sort_coo_rows``,
+and every downstream segment-sum trusts the ``sorted_rows`` tag.  They were
+previously only example-tested; the sweeps here pin them across random
+shapes, duplicate coordinates, and unsorted layouts.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.similarity import build_knn_graph
+from repro.sparse.formats import COO
+from repro.sparse.ops import sort_coo_rows, symmetrize_coo
+
+
+def _random_coo(n, nnz, seed, *, shuffle=True):
+    rng = np.random.default_rng(seed)
+    row = rng.integers(0, n, nnz).astype(np.int32)
+    col = rng.integers(0, n, nnz).astype(np.int32)
+    val = rng.normal(size=nnz).astype(np.float32)
+    if not shuffle:
+        order = np.argsort(row, kind="stable")
+        row, col, val = row[order], col[order], val[order]
+    return COO(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val), (n, n),
+               sorted_rows=not shuffle)
+
+
+def _dense(w):
+    d = np.zeros(w.shape)
+    np.add.at(d, (np.asarray(w.row), np.asarray(w.col)), np.asarray(w.val))
+    return d
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 40), nnz=st.integers(1, 200), seed=st.integers(0, 10**5))
+def test_property_sort_coo_rows_idempotent_and_stable(n, nnz, seed):
+    """sort(sort(w)) == sort(w) (bitwise), the tag flips to True, and the
+    in-row order of (col, val) pairs is preserved — a *stable* row sort is
+    what lets duplicate-coordinate layouts keep deterministic summation
+    order through the CSR/ELL converters."""
+    w = _random_coo(n, nnz, seed)
+    s1 = sort_coo_rows(w)
+    assert s1.sorted_rows is True
+    r1 = np.asarray(s1.row)
+    assert (np.diff(r1) >= 0).all()
+    # idempotence: the second sort is bitwise a no-op
+    s2 = sort_coo_rows(s1)
+    np.testing.assert_array_equal(np.asarray(s2.row), r1)
+    np.testing.assert_array_equal(np.asarray(s2.col), np.asarray(s1.col))
+    np.testing.assert_array_equal(np.asarray(s2.val), np.asarray(s1.val))
+    # stability: matches numpy's stable argsort of the original rows
+    order = np.argsort(np.asarray(w.row), kind="stable")
+    np.testing.assert_array_equal(r1, np.asarray(w.row)[order])
+    np.testing.assert_array_equal(np.asarray(s1.col), np.asarray(w.col)[order])
+    np.testing.assert_array_equal(np.asarray(s1.val), np.asarray(w.val)[order])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 40), nnz=st.integers(1, 200), seed=st.integers(0, 10**5))
+def test_property_symmetrize_coo_symmetry_and_degrees(n, nnz, seed):
+    """dense(symmetrize(w)) == (W + Wᵀ)/2 exactly; degrees (row sums) equal
+    column sums; nnz doubles (static shape) and the sorted tag drops."""
+    w = _random_coo(n, nnz, seed, shuffle=False)
+    s = symmetrize_coo(w)
+    assert s.sorted_rows is False  # appended transpose half is unsorted
+    assert s.nnz == 2 * w.nnz
+    dw, ds = _dense(w), _dense(s)
+    np.testing.assert_allclose(ds, (dw + dw.T) / 2.0, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ds, ds.T, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ds.sum(0), ds.sum(1), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(8, 40), k=st.integers(1, 6), seed=st.integers(0, 10**5),
+       lsh=st.booleans())
+def test_property_build_knn_graph_nnz_2nk(n, k, seed, lsh):
+    """The jit contract of the device Stage 1 under random point sets, both
+    search methods: static nnz = 2·n·k, sorted rows, symmetric dense form,
+    non-negative weights — the invariants the rerank output must uphold."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    kw = dict(method="lsh", n_tables=4, n_bits=8) if lsh else {}
+    w = build_knn_graph(x, k, measure="exp_decay", **kw)
+    assert w.nnz == 2 * n * k
+    assert w.sorted_rows is True
+    r = np.asarray(w.row)
+    assert (np.diff(r) >= 0).all()
+    assert (np.asarray(w.val) >= 0).all()
+    d = _dense(w)
+    np.testing.assert_allclose(d, d.T, rtol=1e-6, atol=1e-6)

@@ -223,6 +223,24 @@ def test_config_round_trip_defaults():
     assert SpectralPipeline.from_dict(json.loads(json.dumps(pipe.to_dict()))) == pipe
 
 
+def test_graph_config_lsh_fields_round_trip_and_validate():
+    """The ANN Stage-1 knobs: JSON round-trip + enum/range validation."""
+    cfg = GraphConfig(method="lsh", n_tables=8, n_bits=20, candidates=256,
+                      lsh_seed=7)
+    back = GraphConfig(**json.loads(json.dumps(cfg.to_dict())))
+    assert back == cfg
+    pipe = SpectralPipeline(n_clusters=4, graph=cfg)
+    assert SpectralPipeline.from_dict(json.loads(json.dumps(pipe.to_dict()))) == pipe
+    with pytest.raises(ValueError, match="method"):
+        GraphConfig(method="annoy")
+    with pytest.raises(ValueError, match="n_tables"):
+        GraphConfig(n_tables=0)
+    with pytest.raises(ValueError, match="n_bits"):
+        GraphConfig(n_bits=25)  # codes must stay fp32-exact int32
+    with pytest.raises(ValueError, match="candidates"):
+        GraphConfig(n_tables=16, candidates=8)  # < one slot per table
+
+
 def test_array_eps_rejected_by_to_dict():
     cfg = GraphConfig(eps=jnp.full((5,), 0.5))  # valid at runtime...
     with pytest.raises(ValueError, match="not JSON-serializable"):
