@@ -4,15 +4,27 @@ FB-shaped (4k nodes, k=10) and Syn200-shaped (20k nodes, k reduced for CPU)
 graphs; our on-device restarted Lanczos vs (a) a dense eigh oracle where
 n allows, (b) the per-iteration cost model of Eq. (10).
 
-Additionally sweeps the block-Lanczos width ``b ∈ {1, 2, 4, 8}`` on the
-FB-shaped graph and writes ``BENCH_eigensolver.json`` — restarts, operator
-passes (nnz streams, the HBM/ICI figure of merit, DESIGN.md §3), and
-eigenvalue agreement vs the single-vector run — so the Stage-2 perf
-trajectory is tracked across PRs.
+Additionally writes ``BENCH_eigensolver.json`` with two sweeps so the
+Stage-2 perf trajectory is tracked across PRs:
+
+* ``block_sweep`` — block-Lanczos width ``b ∈ {1, 2, 4, 8}`` on the
+  FB-shaped graph: restarts, operator passes (nnz streams, the HBM/ICI
+  figure of merit, DESIGN.md §3), eigenvalue agreement vs b=1;
+* ``solver_sweep`` — the paper's "k is typically very large" regime
+  (k = 64 and k = 256 SBMs, BlockELL operators built eagerly): thick-
+  restart Lanczos (b ∈ {1, 4}) vs the Chebyshev polynomial filter
+  (``EigConfig(solver="chebyshev")``, DESIGN.md §13) over a degree × R
+  grid — SpMM-stream and wall columns plus clustering ARI vs the planted
+  partition, so the stream win is tied to unchanged label quality.  The
+  k = 256 point sits past the wall-clock crossover where the filter beats
+  block Lanczos on both axes.
+
+``--smoke`` shrinks both sweeps to CI-sized graphs (seconds, not minutes).
 """
 from __future__ import annotations
 
 import json
+import sys
 
 import numpy as np
 import jax
@@ -38,14 +50,14 @@ def _run(name, n_per, r, k, m):
     return us
 
 
-def block_sweep(out_path: str = "BENCH_eigensolver.json") -> dict:
+def block_sweep(smoke: bool = False) -> dict:
     """Block-Lanczos sweep on the FB-shaped SBM graph.
 
     The basis widens with the block (m = max(4k, k + 8b), DESIGN.md §3) —
     block mode trades polynomial degree per basis column for nnz-stream
     amortization, and the extra columns buy the degree back.
     """
-    coo, _ = sbm_graph(1010, 4, 0.3, 0.01, seed=1)
+    coo, _ = sbm_graph(100 if smoke else 1010, 4, 0.3, 0.01, seed=1)
     n = coo.shape[0]
     adj = normalize_sym(coo)
     k, tol = 10, 1e-5
@@ -85,40 +97,149 @@ def block_sweep(out_path: str = "BENCH_eigensolver.json") -> dict:
              f"restarts={restarts};passes={passes};speedup={speedup:.2f}x;"
              f"ev_diff={ev_diff:.1e}")
 
-    report = {
+    return {
         "benchmark": "eigensolver_block_sweep",
         "graph": {"name": "sbm_fb_shaped", "n": n, "nnz": int(coo.nnz),
                   "k": k, "tol": tol},
         "entries": entries,
     }
-    with open(out_path, "w") as f:
+
+
+def solver_sweep(smoke: bool = False) -> dict:
+    """Lanczos (b ∈ {1, 4}) vs Chebyshev filter across the "k is typically
+    very large" regime (k = 64 and k = 256 planted SBM partitions).  Streams
+    are the figure of merit (:func:`repro.core.lanczos.operator_passes` vs
+    :func:`repro.core.chebyshev.operator_streams`); ARI vs the planted
+    partition keeps the comparison honest on label quality.
+
+    All entries run on the BlockELL representation with the operator built
+    eagerly (``pipe.operator(state)`` outside jit, passed as ``operator=``) —
+    on CPU the COO SpMM falls back to per-column segment sums, so an [n, R]
+    filter stream would pay R× the mv cost and the comparison would measure
+    the format, not the solver.  BlockELL vectorizes over columns for both
+    engines, which is also the deployed fast path
+    (``EigConfig(representation="blockell")``).
+    """
+    from repro.core.chebyshev import ChebConfig
+    from repro.core.chebyshev import operator_streams as cheb_streams
+    from repro.core.spectral import EigConfig, SpectralPipeline
+
+    # (n_per, r, p_in, p_out): k = r planted clusters, n = n_per * r
+    points = [(30, 8, 0.4, 0.005)] if smoke else [
+        (64, 64, 0.4, 0.005),    # k=64: block Lanczos still wins wall here
+        (32, 256, 0.5, 0.001),   # k=256: past the crossover — filter wins both
+    ]
+    sweeps = []
+    for n_per, r, p_in, p_out in points:
+        k = r
+        coo, truth = sbm_graph(n_per, r, p_in, p_out, seed=1)
+        n = coo.shape[0]
+
+        def ari(labels):
+            a = np.asarray(truth)
+            b = np.asarray(labels)
+            cont = np.zeros((a.max() + 1, int(b.max()) + 1), np.int64)
+            np.add.at(cont, (a, b), 1)
+            comb = lambda x: x * (x - 1) / 2.0
+            sum_ij = comb(cont).sum()
+            sum_a, sum_b = comb(cont.sum(1)).sum(), comb(cont.sum(0)).sum()
+            expected = sum_a * sum_b / comb(n)
+            max_idx = (sum_a + sum_b) / 2.0
+            return float((sum_ij - expected) / (max_idx - expected))
+
+        entries = []
+
+        def bench(eig_cfg, solver_cfg, streams_of, tag, params):
+            pipe = SpectralPipeline(n_clusters=k, eig=eig_cfg)
+            state = pipe.prepare(coo)
+            op = pipe.operator(state)  # eager: host-side BlockELL conversion
+            fn = jax.jit(lambda key: pipe.embed(state, key, operator=op))
+            us = time_fn(fn, jax.random.PRNGKey(0), iters=1)
+            emb = fn(jax.random.PRNGKey(0))
+            out = pipe.cluster(emb, jax.random.PRNGKey(1))
+            streams = streams_of(solver_cfg, emb)
+            entry = {"solver": tag, **params, "us_embed": us,
+                     "operator_streams": streams, "ari": ari(out.labels)}
+            entries.append(entry)
+            emit(f"eigensolver/solver_sweep_{tag}_n{n}_k{k}",
+                 us, f"streams={streams};ari={entry['ari']:.3f}")
+            return entry
+
+        # single-vector Lanczos at k=256 runs m=512 with one column per
+        # stream — minutes of wall for a baseline the b=4 entry already
+        # dominates; drop it above k=64 (noted here, not silently)
+        for b in (1, 4) if k <= 64 else (4,):
+            eig = EigConfig(block_size=b, tol=1e-4,
+                            representation="blockell")
+            pipe = SpectralPipeline(n_clusters=k, eig=eig)
+            lcfg = pipe._lanczos_config(n)
+            bench(eig, lcfg,
+                  lambda c, e: operator_passes(c, int(e.restarts)),
+                  f"lanczos_b{b}",
+                  {"block_size": b, "m": effective_basis_size(lcfg)})
+
+        degrees = (16, 32) if smoke else (32, 64)
+        # the wide-sketch column only at k=64 — R=2k at k=256 doubles every
+        # stream's column count for no accuracy headroom (ARI already flat)
+        widths = tuple(dict.fromkeys((k + 8, 2 * k))) if k <= 64 else (k + 8,)
+        for degree in degrees:
+            for n_signals in widths:
+                eig = EigConfig(solver="chebyshev", cheb_degree=degree,
+                                n_signals=n_signals,
+                                representation="blockell")
+                ccfg = ChebConfig(k=k, degree=degree, n_signals=n_signals)
+                bench(eig, ccfg, lambda c, e: cheb_streams(c),
+                      f"chebyshev_d{degree}_R{n_signals}",
+                      {"degree": degree, "n_signals": n_signals})
+
+        sweeps.append({
+            "graph": {"name": f"sbm_k{k}", "n": n, "nnz": int(coo.nnz),
+                      "k": k, "p_in": p_in, "p_out": p_out},
+            "entries": entries,
+        })
+
+    return {
+        "benchmark": "eigensolver_solver_sweep",
+        "representation": "blockell",
+        "note": ("crossover: block Lanczos (b=4) wins wall up through "
+                 "k≈128; the Chebyshev filter wins both streams and wall "
+                 "at k=256, where reorthogonalization + the [n, 2k] restart "
+                 "QR dominate Lanczos"),
+        "sweeps": sweeps,
+    }
+
+
+def main(smoke: bool = False) -> None:
+    if not smoke:
+        # FB-shaped: 4k nodes, k=10 (paper: 0.022 s CUDA / 0.103 s Matlab)
+        us = _run("fb", 1010, 4, 10, 40)
+        n = 4040
+        # dense oracle comparison at the same size
+        coo, _ = sbm_graph(1010, 4, 0.3, 0.01, seed=1)
+        dense = np.zeros((n, n), np.float32)
+        adj = normalize_sym(coo)
+        dense[np.asarray(adj.row), np.asarray(adj.col)] = np.asarray(adj.val)
+        import time
+
+        t0 = time.perf_counter()
+        np.linalg.eigvalsh(dense)
+        dense_us = (time.perf_counter() - t0) * 1e6
+        emit("eigensolver/dense_eigh_oracle_n4040", dense_us,
+             f"speedup={dense_us/us:.1f}x")
+
+        # Syn200-shaped: 20k nodes (paper k=200; k scaled to 32 for CPU wallclock)
+        _run("syn200", 1000, 20, 32, 96)
+
+    # sweeps + JSON perf record
+    report = {
+        "benchmark": "eigensolver",
+        "smoke": smoke,
+        "block_sweep": block_sweep(smoke),
+        "solver_sweep": solver_sweep(smoke),
+    }
+    with open("BENCH_eigensolver.json", "w") as f:
         json.dump(report, f, indent=2)
-    return report
-
-
-def main() -> None:
-    # FB-shaped: 4k nodes, k=10 (paper: 0.022 s CUDA / 0.103 s Matlab)
-    us = _run("fb", 1010, 4, 10, 40)
-    n = 4040
-    # dense oracle comparison at the same size
-    rng = np.random.default_rng(0)
-    coo, _ = sbm_graph(1010, 4, 0.3, 0.01, seed=1)
-    dense = np.zeros((n, n), np.float32)
-    adj = normalize_sym(coo)
-    dense[np.asarray(adj.row), np.asarray(adj.col)] = np.asarray(adj.val)
-    import time
-
-    t0 = time.perf_counter()
-    np.linalg.eigvalsh(dense)
-    dense_us = (time.perf_counter() - t0) * 1e6
-    emit("eigensolver/dense_eigh_oracle_n4040", dense_us, f"speedup={dense_us/us:.1f}x")
-
-    # Syn200-shaped: 20k nodes (paper k=200; k scaled to 32 for CPU wallclock)
-    _run("syn200", 1000, 20, 32, 96)
-
-    # block-Lanczos sweep + JSON perf record
-    block_sweep()
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

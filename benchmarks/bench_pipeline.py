@@ -17,7 +17,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import emit, purity, time_fn
-from repro.core.spectral import KMeansConfig, SpectralPipeline
+from repro.core.spectral import EigConfig, KMeansConfig, SpectralPipeline
 from repro.data.sbm import sbm_graph
 
 
@@ -38,13 +38,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI-sized shapes")
     ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--solver", default="lanczos",
+                    choices=("lanczos", "chebyshev"),
+                    help="Stage-2 engine behind EigConfig(solver=...)")
     args = ap.parse_args()
     datasets = SMOKE_DATASETS if args.smoke else DATASETS
 
     records = []
     for name, (n_per, r, p, q) in datasets.items():
         coo, truth = sbm_graph(n_per, r, p, q, seed=7)
-        pipe = SpectralPipeline(n_clusters=r, kmeans=KMeansConfig(assign="ref"))
+        pipe = SpectralPipeline(n_clusters=r, eig=EigConfig(solver=args.solver),
+                                kmeans=KMeansConfig(assign="ref"))
         key = jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(key)
 
@@ -72,6 +76,7 @@ def main() -> None:
             "n": coo.shape[0],
             "k": r,
             "nnz": coo.nnz,
+            "solver": args.solver,  # which engine produced us_embed
             "us_prepare": round(us_prepare, 1),
             "us_embed": round(us_embed, 1),
             "us_cluster": round(us_cluster, 1),
@@ -85,8 +90,10 @@ def main() -> None:
         "bench": "pipeline",
         "backend": jax.default_backend(),
         "smoke": bool(args.smoke),
+        "solver": args.solver,
         "config_example": SpectralPipeline(
-            n_clusters=8, kmeans=KMeansConfig(assign="ref")).to_dict(),
+            n_clusters=8, eig=EigConfig(solver=args.solver),
+            kmeans=KMeansConfig(assign="ref")).to_dict(),
         "records": records,
     }
     with open("BENCH_pipeline.json", "w") as f:

@@ -42,6 +42,12 @@ def main() -> None:
                          "or LSH candidates + exact rerank (n ≫ 100k)")
     ap.add_argument("--kmeans-iter", choices=("fused", "two_pass"), default="fused",
                     help="Stage-3 Lloyd engine (fused = one data stream/iter)")
+    ap.add_argument("--solver", default="lanczos",
+                    choices=("lanczos", "chebyshev"),
+                    help="Stage-2 engine: thick-restart Lanczos or the "
+                         "Chebyshev polynomial filter — at paper scale "
+                         "(--full: k=500) the filter's fixed stream count "
+                         "sidesteps the reorthogonalization wall")
     args = ap.parse_args()
     if args.graph_method == "lsh" and not args.device_stage1:
         ap.error("--graph-method lsh requires --device-stage1 (the host "
@@ -63,7 +69,7 @@ def main() -> None:
         n_clusters=k,
         graph=GraphConfig(knn_k=args.knn, measure="cross_correlation",
                           method=args.graph_method),
-        eig=EigConfig(tol=1e-4),
+        eig=EigConfig(tol=1e-4, solver=args.solver),
         kmeans=KMeansConfig(iter=args.kmeans_iter),
     )
     if args.device_stage1:

@@ -33,18 +33,24 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--block-size", type=int, default=1,
                     help="Lanczos Krylov block width b (>1: multi-vector SpMM mode)")
+    ap.add_argument("--solver", default="lanczos",
+                    choices=("lanczos", "chebyshev"),
+                    help="Stage-2 engine: thick-restart Lanczos (exact "
+                         "eigenpairs) or the Chebyshev polynomial filter "
+                         "(fixed operator-stream cost — the large-k path)")
     args = ap.parse_args()
 
     coo, truth = sbm_graph(args.n_per, args.clusters, args.p_in, args.p_out, seed=args.seed)
     print(f"graph: {coo.shape[0]} nodes, {coo.nnz} directed edges")
 
     pipe = SpectralPipeline(n_clusters=args.clusters,
-                            eig=EigConfig(block_size=args.block_size))
+                            eig=EigConfig(block_size=args.block_size,
+                                          solver=args.solver))
     out = jax.jit(lambda w, key: pipe.run(w, key))(coo, jax.random.PRNGKey(args.seed))
 
     labels = np.asarray(out.labels)
     ev = np.asarray(out.eigenvalues)
-    print(f"Lanczos restarts: {int(out.lanczos_restarts)}  "
+    print(f"solver: {args.solver}  restarts: {int(out.lanczos_restarts)}  "
           f"k-means iterations: {int(out.kmeans_iterations)}")
     print(f"smallest Laplacian eigenvalues: {np.round(ev[:min(10, len(ev))], 4)}")
     print(f"purity vs planted partition: {purity(labels, truth):.3f}")

@@ -15,6 +15,15 @@ The sharded *operator* itself (gspmd / shard_map SpMV+SpMM engines behind
 one protocol) is :class:`repro.core.operator.ShardedCooOperator`; the
 normalization helper moved to :func:`repro.sparse.distributed.normalize_sharded`
 (re-exported here for compatibility).
+
+Stage-2 solver dispatch is representation-agnostic: because both engines in
+:func:`repro.core.lanczos.eigsh` (thick-restart Lanczos and the Chebyshev
+polynomial filter, ``EigConfig(solver="chebyshev")``) drive the operator only
+through ``op.mm``, the sharded plan runs *distributed filtering* for free —
+every Chebyshev recurrence step is the existing one-all-gather-per-application
+SpMM, and the filter adds zero new collectives (no per-step orthogonalization,
+no global QR inside the iteration; the single trailing QR + Rayleigh-Ritz on
+the [n, R] filtered block happens once, outside the recurrence).
 """
 from __future__ import annotations
 

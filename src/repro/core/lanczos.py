@@ -117,6 +117,36 @@ def operator_passes(cfg: LanczosConfig, restarts: int) -> int:
     return first + max(0, int(restarts) - 1) * steady
 
 
+def validate_basis(cfg: LanczosConfig, n: int) -> None:
+    """Eager (trace-time) sanity of the basis geometry — degenerate requests
+    like ``n_eigvecs > n//2``-ish used to surface as opaque shape errors from
+    inside the restart loop; this raises the actionable message instead."""
+    b = max(1, cfg.block_size)
+    if cfg.k < 1:
+        raise ValueError(f"LanczosConfig.k must be >= 1, got {cfg.k}")
+    if cfg.m <= cfg.k:
+        raise ValueError(
+            f"LanczosConfig.m={cfg.m} must exceed k={cfg.k} — the Krylov "
+            f"basis (ARPACK's ncv) needs room beyond the wanted pairs; the "
+            f"default is ~2k (see default_config / default_basis_size)")
+    m = effective_basis_size(cfg)
+    if m + b > n:
+        raise ValueError(
+            f"LanczosConfig(k={cfg.k}, m={cfg.m}, block_size={cfg.block_size})"
+            f" needs {m} basis + {b} residual column(s) = {m + b} orthonormal"
+            f" vectors in R^n but the operator dimension is n={n}. The "
+            f"requested eigenpair count is too large for this problem (the "
+            f"default basis is ~2k, so k should stay well below n/2): reduce "
+            f"k / EigConfig.n_eigvecs, shrink m / EigConfig.basis_m, or use "
+            f"a dense jnp.linalg.eigh — at this size it is the faster exact "
+            f"solver anyway")
+    if b > 1 and m < cfg.k + 2 * b:
+        raise ValueError(
+            f"block Lanczos needs m >= k + 2*block_size so every restart "
+            f"cycle runs at least two block steps (m={m}, k={cfg.k}, "
+            f"b={b}) — widen m / EigConfig.basis_m or shrink block_size")
+
+
 def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
     """Random unit vector orthogonal to the (zero-padded) basis rows —
     invariant-subspace escape hatch (ARPACK does the same on breakdown)."""
@@ -125,7 +155,7 @@ def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
     return r / jnp.maximum(jnp.linalg.norm(r), 1e-30)
 
 
-def eigsh(op, cfg: LanczosConfig, *, v0: Optional[Array] = None,
+def eigsh(op, cfg, *, v0: Optional[Array] = None,
           key: Optional[Array] = None) -> LanczosResult:
     """Top-k eigenpairs of a symmetric :class:`~repro.core.operator.LinearOperator`.
 
@@ -135,8 +165,19 @@ def eigsh(op, cfg: LanczosConfig, *, v0: Optional[Array] = None,
     implementation (COO segment-sum, BlockELL Pallas SpMM, shard_map pod
     SpMV, a bare-closure :class:`~repro.core.operator.CallableOperator`)
     plugs in unchanged.
+
+    The config type selects the engine: a :class:`LanczosConfig` runs the
+    thick-restart Lanczos below; a :class:`~repro.core.chebyshev.ChebConfig`
+    runs the polynomial-filter embedding
+    (:func:`repro.core.chebyshev.chebyshev_eigsh`) — same operator contract,
+    same :class:`LanczosResult` out.
     """
+    from repro.core.chebyshev import ChebConfig, chebyshev_eigsh
+
+    if isinstance(cfg, ChebConfig):
+        return chebyshev_eigsh(op, cfg, v0=v0, key=key)
     n = op.shape[0]
+    validate_basis(cfg, n)
     if cfg.block_size > 1:
         return _lanczos_topk_block(op.mm, n, cfg, v0=v0, key=key)
     return _lanczos_topk_single(op.mv, n, cfg, v0=v0, key=key)

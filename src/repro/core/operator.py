@@ -112,6 +112,19 @@ class BlockEllOperator:
 
         return ell_spmm(self.a, x, impl=self.impl, interpret=self.interpret)
 
+    def cheb_step(self, x: Array, prev: Array, ca: Array, cb: Array) -> Array:
+        """Fused Chebyshev three-term step ``ca·(A x) + cb·x − prev``.
+
+        Optional protocol hook consumed by
+        :func:`repro.core.chebyshev.chebyshev_filter`: the recurrence's AXPY
+        chain rides the ``ell_spmm`` epilogue instead of issuing three extra
+        elementwise passes over the [n, b] iterates.
+        """
+        from repro.kernels.ell_spmm.ops import ell_spmm_cheb_step
+
+        return ell_spmm_cheb_step(
+            self.a, x, prev, ca, cb, impl=self.impl, interpret=self.interpret)
+
 
 jax.tree_util.register_dataclass(BlockEllOperator, ["a"], ["impl", "interpret", "mesh"])
 

@@ -149,9 +149,33 @@ class GraphConfig:
         return d
 
 
+_SOLVERS = ("lanczos", "chebyshev")
+_REPRESENTATIONS = ("coo", "blockell")
+
+
 @dataclasses.dataclass(frozen=True)
 class EigConfig:
-    """Stage-2 knobs (restarted Lanczos eigensolver, paper Alg. 2-3)."""
+    """Stage-2 knobs (paper Alg. 2-3).
+
+    ``solver`` selects the embedding engine: ``"lanczos"`` (default, the
+    thick-restart Lanczos — exact eigenpairs, reorthogonalization-bound at
+    large k) or ``"chebyshev"`` (Jackson-damped polynomial-filter embedding
+    of ``n_signals`` random sketches — fixed operator-stream cost, no
+    reorthogonalization, no global QR per step; DESIGN.md §13).  The
+    chebyshev knobs: ``cheb_degree`` (filter sharpness), ``n_signals``
+    (sketch width R; ``None`` → k + 8), ``lambda_cut`` (passband edge in
+    adjacency-eigenvalue units, "keep θ ≥ λ_cut"; ``None`` locates it by
+    eigencount bisection targeting k).
+
+    ``representation`` picks the single-device Stage-2 operator layout:
+    ``"coo"`` (segment-sum SpMM) or ``"blockell"`` (host-side
+    ``csr_to_blockell`` conversion at the operator injection point, so both
+    solvers stream the Pallas ``ell_spmm`` kernel).  The conversion is
+    host-side data-pipeline work: under a jit trace the graph values are
+    abstract, so the pipeline falls back to COO with a warning — build the
+    graph state eagerly (or pass ``operator=`` to :meth:`SpectralPipeline
+    .embed`) to get the fast path inside a jitted embed.
+    """
 
     n_eigvecs: Optional[int] = None  # embedding width; default: n_clusters
     basis_m: Optional[int] = None  # Krylov basis (ARPACK ncv); default 2k-ish
@@ -160,6 +184,11 @@ class EigConfig:
     block_size: int = 1  # Krylov block width b (>1: multi-vector SpMM mode)
     drop_first: bool = False  # drop the trivial eigenvector from the embedding
     fixed_restarts: Optional[int] = None  # static-cost mode (dry-run/bench)
+    solver: str = "lanczos"  # "lanczos" | "chebyshev" (polynomial filter)
+    cheb_degree: int = 64  # Chebyshev filter degree (transition sharpness)
+    n_signals: Optional[int] = None  # chebyshev sketch width R; None → k + 8
+    lambda_cut: Optional[float] = None  # passband edge; None → bisection
+    representation: str = "coo"  # single-device operator: "coo" | "blockell"
 
     def __post_init__(self):
         if self.block_size < 1:
@@ -167,6 +196,21 @@ class EigConfig:
                 f"EigConfig.block_size must be >= 1, got {self.block_size}")
         if self.tol <= 0:
             raise ValueError(f"EigConfig.tol must be > 0, got {self.tol}")
+        if self.solver not in _SOLVERS:
+            raise ValueError(
+                f"EigConfig.solver must be one of {_SOLVERS} (Stage-2 "
+                f"engine dispatch), got {self.solver!r}")
+        if self.cheb_degree < 1:
+            raise ValueError(
+                f"EigConfig.cheb_degree must be >= 1, got {self.cheb_degree}")
+        if self.n_signals is not None and self.n_signals < 1:
+            raise ValueError(
+                f"EigConfig.n_signals must be >= 1 (or None for the k + 8 "
+                f"default), got {self.n_signals}")
+        if self.representation not in _REPRESENTATIONS:
+            raise ValueError(
+                f"EigConfig.representation must be one of {_REPRESENTATIONS} "
+                f"(Stage-2 operator layout), got {self.representation!r}")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -309,13 +353,60 @@ class SpectralPipeline:
             block_size=b,
         )
 
+    def _cheb_config(self, n: int):
+        from repro.core.chebyshev import ChebConfig
+
+        e = self.eig
+        k = (e.n_eigvecs or self.n_clusters) + (1 if e.drop_first else 0)
+        return ChebConfig(
+            k=k,
+            degree=e.cheb_degree,
+            n_signals=e.n_signals,
+            lambda_cut=e.lambda_cut,
+            which="LA",
+        )
+
+    def _eig_config(self, n: int):
+        """The engine config :func:`repro.core.lanczos.eigsh` dispatches on —
+        the solver="lanczos" branch is byte-identical to the pre-chebyshev
+        call chain (the bitwise shim tests pin this)."""
+        if self.eig.solver == "chebyshev":
+            return self._cheb_config(n)
+        return self._lanczos_config(n)
+
     def operator(self, state: GraphState) -> LinearOperator:
         """The Stage-2 operator for this graph under this plan — the single
-        place operator representations are chosen (swap freely here)."""
+        place operator representations are chosen (swap freely here).
+
+        ``eig.representation="blockell"`` converts the COO graph to
+        BlockELL(+tail) host-side so both solvers stream the Pallas
+        ``ell_spmm`` kernel.  Conversion needs concrete arrays — under a jit
+        trace it falls back to the COO operator with a warning (build the
+        state eagerly, or pass ``operator=`` into :meth:`embed`).
+        """
         if isinstance(state.adj, ShardedCOO):
             return ShardedCooOperator(
                 state.adj, variant=self.plan.variant, mesh=self.plan.mesh,
                 axis=self.plan.axis, gather_dtype=self.plan.gather_dtype)
+        if self.eig.representation == "blockell":
+            from repro.core.operator import BlockEllOperator
+            from repro.sparse.formats import coo_to_csr, csr_to_blockell
+
+            try:
+                # host-side conversion: raises on traced arrays — including
+                # closure-constant states, whose indptr gets staged by the
+                # device_put inside coo_to_csr
+                return BlockEllOperator(csr_to_blockell(coo_to_csr(state.adj)))
+            except jax.errors.TracerArrayConversionError:
+                import warnings
+
+                warnings.warn(
+                    "EigConfig.representation='blockell' needs concrete "
+                    "graph arrays (csr_to_blockell is host-side); falling "
+                    "back to the COO operator under this jit trace — build "
+                    "the operator eagerly (pipe.operator(state)) and pass "
+                    "operator= to embed()",
+                    RuntimeWarning, stacklevel=3)
         return CooOperator(state.adj)
 
     # -- Stage 1 ------------------------------------------------------------
@@ -398,17 +489,20 @@ class SpectralPipeline:
 
     def embed(self, state: GraphState, key: Array, *,
               operator: Optional[LinearOperator] = None) -> EmbedState:
-        """Stage 2: top-k eigenpairs of the normalized adjacency → the
-        Ng-Jordan-Weiss spectral embedding.  ``operator`` overrides the
-        plan-chosen operator (any :class:`LinearOperator` — e.g. a
+        """Stage 2: the spectral embedding of the normalized adjacency — the
+        top-k eigenpairs via thick-restart Lanczos (``eig.solver="lanczos"``)
+        or the Chebyshev polynomial-filter sketch (``"chebyshev"``), mapped
+        to the Ng-Jordan-Weiss rows.  ``operator`` overrides the plan-chosen
+        operator (any :class:`LinearOperator` — e.g. a
         :class:`~repro.core.operator.BlockEllOperator`)."""
         n = state.adj.shape[0]
         op = self.operator(state) if operator is None else operator
-        lcfg = self._lanczos_config(n)
+        scfg = self._eig_config(n)
         # deterministic, informative start: D^{1/2}·1 is exactly the trivial
-        # eigenvector of A_sym — Lanczos deflates it in one step.
+        # eigenvector of A_sym — Lanczos deflates it in one step (the
+        # chebyshev path seeds its sketch with it for the same reason).
         v0 = jnp.sqrt(jnp.maximum(state.deg.astype(jnp.float32), 0.0)) + 1e-3
-        eig = lz.eigsh(op, lcfg, v0=v0, key=key)
+        eig = lz.eigsh(op, scfg, v0=v0, key=key)
         vecs = eig.eigenvectors
         vals = eig.eigenvalues
         if self.eig.drop_first:

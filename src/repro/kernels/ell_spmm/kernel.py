@@ -25,6 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, cols_ref, vals_ref, y_ref):
@@ -33,6 +34,20 @@ def _kernel(x_ref, cols_ref, vals_ref, y_ref):
     x = x_ref[...]  # [n, b] f32 (VMEM resident)
     gathered = jnp.take(x, cols, axis=0, fill_value=0.0)  # [br, w, b] VPU gather
     y_ref[...] = (vals.astype(jnp.float32)[..., None] * gathered).sum(axis=1)
+
+
+def _cheb_kernel(coef_ref, x_ref, cols_ref, vals_ref, xt_ref, prev_ref, y_ref):
+    """SpMM tile with the Chebyshev three-term epilogue fused in:
+    ``y = ca·(A x) + cb·x − prev`` — the recurrence's AXPY chain rides the
+    SpMM pass instead of re-streaming the [n, b] iterates through HBM."""
+    ca = coef_ref[0, 0]  # 4/(hi−lo) · sign (SMEM scalars, traced bounds)
+    cb = coef_ref[0, 1]  # −2(hi+lo)/(hi−lo)
+    cols = cols_ref[...]  # [br, w] int32
+    vals = vals_ref[...]  # [br, w] f32
+    x = x_ref[...]  # [n_pad, b] f32 (VMEM resident; rows ≥ n are zero)
+    gathered = jnp.take(x, cols, axis=0, fill_value=0.0)
+    ax = (vals.astype(jnp.float32)[..., None] * gathered).sum(axis=1)
+    y_ref[...] = ca * ax + cb * xt_ref[...] - prev_ref[...]
 
 
 def ell_spmm_pallas(
@@ -59,3 +74,42 @@ def ell_spmm_pallas(
         out_shape=jax.ShapeDtypeStruct((n_rows, b), jnp.float32),
         interpret=interpret,
     )(x, cols, vals)
+
+
+def ell_spmm_cheb_pallas(
+    x: jax.Array,  # [n_rows_padded, b] f32, rows ≥ n zero-padded
+    cols: jax.Array,  # [n_rows_padded, width] int32
+    vals: jax.Array,  # [n_rows_padded, width] f32
+    prev: jax.Array,  # [n_rows_padded, b] f32, the T_{j-1} iterate
+    coef: jax.Array,  # [1, 2] f32: (ca, cb)
+    *,
+    block_rows: int = 512,
+    interpret: bool = False,
+):
+    """Fused Chebyshev step ``ca·(A_ell x) + cb·x − prev`` over the ELL body.
+
+    ``x`` enters twice: whole-resident as the gather source, and row-tiled
+    for the ``cb·x`` epilogue term (same array, two BlockSpecs — no extra
+    copy).  The COO tail's ``ca·(A_tail x)`` is added by the wrapper.
+    """
+    n_rows, width = cols.shape
+    assert n_rows % block_rows == 0, (n_rows, block_rows)
+    n_pad, b = x.shape
+    assert n_pad == n_rows and prev.shape == x.shape, (x.shape, prev.shape, n_rows)
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        _cheb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),  # (ca, cb) scalars
+            pl.BlockSpec((n_pad, b), lambda i: (0, 0)),  # x: gather source
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, b), lambda i: (i, 0)),  # x tile (cb·x)
+            pl.BlockSpec((block_rows, b), lambda i: (i, 0)),  # prev tile
+        ],
+        out_specs=pl.BlockSpec((block_rows, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, b), jnp.float32),
+        interpret=interpret,
+    )(coef, x, cols, vals, x, prev)

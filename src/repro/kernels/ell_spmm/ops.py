@@ -12,8 +12,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ell_spmm.kernel import ell_spmm_pallas
-from repro.kernels.ell_spmm.ref import ell_spmm_ref
+from repro.kernels.ell_spmm.kernel import ell_spmm_cheb_pallas, ell_spmm_pallas
+from repro.kernels.ell_spmm.ref import ell_spmm_cheb_ref, ell_spmm_ref
 from repro.sparse.formats import BlockELL
 from repro.sparse.ops import spmm_coo
 
@@ -47,4 +47,60 @@ def ell_spmm(
         )
     y = body[: m.shape[0]]
     y = y + spmm_coo(m.tail, x).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "block_rows"))
+def ell_spmm_cheb_step(
+    m: BlockELL,
+    x: jax.Array,  # [n, b] current iterate T_j
+    prev: jax.Array,  # [n, b] previous iterate T_{j-1}
+    ca: jax.Array,  # scalar: 4/(hi−lo) · sign
+    cb: jax.Array,  # scalar: −2(hi+lo)/(hi−lo)
+    *,
+    impl: str = "auto",  # "auto" | "pallas" | "ref"
+    interpret: bool | None = None,
+    block_rows: int = 512,
+):
+    """One fused Chebyshev three-term step: ``ca·(A x) + cb·x − prev``.
+
+    On the Pallas path the AXPY epilogue is fused into the ELL SpMM pass, so
+    the [n, b] iterates are written once instead of read back for three
+    separate elementwise ops; the COO tail contributes ``ca·(A_tail x)``
+    outside the kernel (HYB layout, same as ``ell_spmm``).
+    """
+    assert x.ndim == 2, f"ell_spmm_cheb_step wants [n, b] multi-vectors, got {x.shape}"
+    assert prev.shape == x.shape, (prev.shape, x.shape)
+    nb, br, w = m.cols.shape
+    n_rows_padded = nb * br
+    n = m.shape[0]
+    cols2d = m.cols.reshape(n_rows_padded, w)
+    vals2d = m.vals.reshape(n_rows_padded, w)
+    ca = jnp.asarray(ca, jnp.float32)
+    cb = jnp.asarray(cb, jnp.float32)
+
+    pad = ((0, n_rows_padded - n), (0, 0))
+    xp = jnp.pad(x.astype(jnp.float32), pad)
+    pp = jnp.pad(prev.astype(jnp.float32), pad)
+
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu and not interpret):
+        body = ell_spmm_cheb_ref(xp, cols2d, vals2d, pp, ca, cb)
+    else:
+        if interpret is None:
+            interpret = not on_tpu
+        blk = block_rows
+        while n_rows_padded % blk:
+            blk //= 2
+        body = ell_spmm_cheb_pallas(
+            xp,
+            cols2d,
+            vals2d,
+            pp,
+            jnp.stack([ca, cb]).reshape(1, 2),
+            block_rows=max(blk, 1),
+            interpret=interpret,
+        )
+    y = body[:n]
+    y = y + ca * spmm_coo(m.tail, x).astype(jnp.float32)
     return y.astype(x.dtype)

@@ -9,3 +9,16 @@ def ell_spmm_ref(x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
     """Y[r, :] = Σ_w vals[r, w] · x[cols[r, w], :]  (padding slots carry val = 0)."""
     gathered = vals.astype(jnp.float32)[..., None] * x.astype(jnp.float32)[cols]
     return gathered.sum(axis=1)
+
+
+def ell_spmm_cheb_ref(
+    x: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    prev: jax.Array,
+    ca: jax.Array,
+    cb: jax.Array,
+) -> jax.Array:
+    """Fused-step oracle: ``ca·(A_ell x) + cb·x − prev`` (ELL body only)."""
+    ax = ell_spmm_ref(x, cols, vals)
+    return ca * ax + cb * x.astype(jnp.float32) - prev.astype(jnp.float32)

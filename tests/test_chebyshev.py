@@ -1,0 +1,336 @@
+"""Chebyshev polynomial-filter solver: dense oracles + pipeline parity gates.
+
+Covers the solver="chebyshev" contracts:
+* the Jackson-damped filter applied by the three-term recurrence matches the
+  dense projector oracle V·diag(h(Λ))·Vᵀ built from the scalar transfer
+  function (same coefficients, so agreement is tight);
+* chebyshev_eigsh recovers the dominant eigenspace of a gapped matrix
+  (subspace angle vs numpy.linalg.eigh);
+* the spectral-bounds estimator brackets the true spectrum (property sweep);
+* eigencount bisection locates a cut with ≈ k eigenvalues above it;
+* ARI-parity gates vs the Lanczos path on blobs + SBM
+  (ARI(chebyshev) ≥ 0.99 · ARI(lanczos));
+* sharded-vs-single parity on a 1-device mesh (gspmd + shard_map);
+* EigConfig round-trips the new fields through JSON and validates them.
+"""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.chebyshev import (
+    ChebConfig,
+    chebyshev_eigsh,
+    chebyshev_filter,
+    chebyshev_moments,
+    eigencount_from_moments,
+    estimate_spectral_bounds,
+    filter_response,
+    find_cut_from_moments,
+    operator_streams,
+    resolved_signals,
+)
+from repro.core.lanczos import eigsh
+from repro.core.operator import CallableOperator, CooOperator
+from repro.core.spectral import EigConfig, Plan, SpectralPipeline
+from repro.data.sbm import sbm_graph
+from repro.sparse.distributed import partition_coo_by_rows
+from repro.sparse.formats import coo_from_edges
+from repro.sparse.ops import normalize_sym
+
+from tests.test_kernels_lsh_candidates import adjusted_rand_index
+
+
+def _gapped_dense(n, k, seed, top=(2.0, 3.0), bulk=(-1.0, 0.5)):
+    """Symmetric matrix with k eigenvalues in `top`, the rest in `bulk`."""
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.concatenate([np.linspace(*top, k), np.linspace(*bulk, n - k)])
+    return ((q * lam) @ q.T).astype(np.float32), q[:, :k], lam
+
+
+def _dense_op(a):
+    aj = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    return CallableOperator(n=n, matvec=lambda x: aj @ x, matmat=lambda x: aj @ x)
+
+
+def _sym_sparse(n, density, seed):
+    rng = np.random.default_rng(seed)
+    W = (rng.random((n, n)) < density) * rng.random((n, n)).astype(np.float32)
+    W = np.triu(W, 1)
+    W = W + W.T
+    r, c = np.nonzero(W)
+    return W, coo_from_edges(r, c, W[r, c], (n, n))
+
+
+# ---------------------------------------------------------------------------
+# Filter vs dense-projector oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degree", [8, 32, 101])
+def test_filter_matches_dense_transfer_function(degree):
+    """h(A)·x computed by the recurrence == V·diag(h(Λ))·Vᵀ·x computed from
+    the scalar transfer function — same coefficients, so the match is tight
+    (this pins the recurrence, not the approximation quality)."""
+    n = 80
+    a_mat, _, _ = _gapped_dense(n, 5, seed=degree)
+    lam, v = np.linalg.eigh(a_mat)
+    lo = jnp.float32(lam[0] - 0.05)
+    hi = jnp.float32(lam[-1] + 0.05)
+    a_cut = jnp.float32(0.3)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((n, 4)), jnp.float32)
+
+    got = chebyshev_filter(_dense_op(a_mat), x, lo, hi, a_cut, degree)
+    h = np.asarray(filter_response(jnp.asarray(lam, jnp.float32), a_cut, lo, hi, degree))
+    want = (v * h) @ (v.T @ np.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_filter_subspace_close_to_projector():
+    """With a wide spectral gap and decent degree the filtered sketch spans
+    the dominant eigenspace: principal angles vs the exact top-k space."""
+    n, k = 150, 5
+    a_mat, v_top, _ = _gapped_dense(n, k, seed=7)
+    op = _dense_op(a_mat)
+    key = jax.random.PRNGKey(0)
+    lo, hi = estimate_spectral_bounds(op, key)
+    g = jax.random.rademacher(jax.random.PRNGKey(1), (n, k + 8), jnp.float32)
+    # map the mid-gap cut λ=1.25 onto [-1, 1]
+    a_cut = (2.0 * 1.25 - (hi + lo)) / (hi - lo)
+    y = chebyshev_filter(op, g, lo, hi, a_cut, degree=64)
+    q, _ = np.linalg.qr(np.asarray(y))
+    s = np.linalg.svd(v_top.T @ q[:, :], compute_uv=False)
+    assert s.min() > 0.999, f"principal cosines {s}"
+
+
+def test_eigsh_matches_dense_oracle():
+    n, k = 200, 6
+    a_mat, v_top, lam = _gapped_dense(n, k, seed=0)
+    res = chebyshev_eigsh(_dense_op(a_mat), ChebConfig(k=k, degree=80),
+                          key=jax.random.PRNGKey(1))
+    want = np.sort(lam)[::-1][:k]
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), want, atol=5e-3)
+    s = np.linalg.svd(v_top.T @ np.asarray(res.eigenvectors), compute_uv=False)
+    assert s.min() > 0.999
+    # the result contract: fixed-cost filter, no restart loop
+    assert int(res.restarts) == 0 and bool(res.converged)
+    assert np.asarray(res.residuals).shape == (k,)
+
+
+def test_eigsh_which_sa_filters_bottom():
+    n, k = 120, 4
+    a_mat, _, lam = _gapped_dense(n, 6, seed=3)
+    res = chebyshev_eigsh(_dense_op(a_mat), ChebConfig(k=k, degree=80, which="SA"),
+                          key=jax.random.PRNGKey(2))
+    want = np.sort(lam)[:k][::-1]  # SA returns its passband top-first on -A
+    np.testing.assert_allclose(np.sort(np.asarray(res.eigenvalues)),
+                               np.sort(want), atol=5e-3)
+
+
+def test_compressive_mode_returns_r_wide_embedding():
+    """R < k is the CSC compressive regime: the embedding stays R wide."""
+    n = 100
+    a_mat, _, _ = _gapped_dense(n, 8, seed=4)
+    res = chebyshev_eigsh(_dense_op(a_mat),
+                          ChebConfig(k=8, n_signals=5, degree=48),
+                          key=jax.random.PRNGKey(0))
+    assert res.eigenvectors.shape == (n, 5)
+    assert res.eigenvalues.shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# Bounds + eigencount
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("n", [50, 200])
+def test_spectral_bounds_contain_spectrum(n, seed):
+    W, coo = _sym_sparse(n, 0.1, seed=seed)
+    adj = normalize_sym(coo)
+    dense = np.zeros((n, n), np.float32)
+    dense[np.asarray(adj.row), np.asarray(adj.col)] = np.asarray(adj.val)
+    lam = np.linalg.eigvalsh(dense)
+    lo, hi = estimate_spectral_bounds(CooOperator(adj), jax.random.PRNGKey(seed))
+    assert float(lo) <= lam[0] + 1e-5, (float(lo), lam[0])
+    assert float(hi) >= lam[-1] - 1e-5, (float(hi), lam[-1])
+    # and not absurdly wide (the margin is relative)
+    assert float(hi) - float(lo) < 3.0 * max(lam[-1] - lam[0], 1e-3)
+
+
+def test_eigencount_bisection_locates_gap_cut():
+    """On a gapped spectrum the moment-based bisection puts the cut inside
+    the gap: counting true eigenvalues above the unmapped cut gives ≈ k."""
+    n, k = 300, 10
+    a_mat, _, lam = _gapped_dense(n, k, seed=11)
+    op = _dense_op(a_mat)
+    lo, hi = estimate_spectral_bounds(op, jax.random.PRNGKey(0))
+    degree = 96
+    mom = chebyshev_moments(op, lo, hi, degree, jax.random.PRNGKey(1), n_probes=16)
+    a_cut = find_cut_from_moments(mom, k)
+    # the damped count at the found cut is ≈ k by construction
+    assert abs(float(eigencount_from_moments(mom, a_cut)) - k) < 1.0
+    # and the unmapped cut separates the true top-k from the bulk
+    lam_cut = float((a_cut * (hi - lo) + (hi + lo)) / 2.0)
+    n_above = int((lam > lam_cut).sum())
+    assert abs(n_above - k) <= 2, (lam_cut, n_above)
+
+
+def test_lambda_cut_skips_moment_pass():
+    """An explicit lambda_cut saves one degree's worth of operator streams."""
+    auto = ChebConfig(k=4, degree=50)
+    fixed = ChebConfig(k=4, degree=50, lambda_cut=1.25)
+    assert operator_streams(auto) - operator_streams(fixed) == 50
+    n = 120
+    a_mat, v_top, _ = _gapped_dense(n, 4, seed=6)
+    res = chebyshev_eigsh(_dense_op(a_mat), ChebConfig(k=4, degree=64, lambda_cut=1.25),
+                          key=jax.random.PRNGKey(0))
+    s = np.linalg.svd(v_top[:, :4].T @ np.asarray(res.eigenvectors), compute_uv=False)
+    assert s.min() > 0.999
+
+
+# ---------------------------------------------------------------------------
+# Config validation + streams accounting
+# ---------------------------------------------------------------------------
+
+def test_cheb_config_validation():
+    with pytest.raises(ValueError, match="k"):
+        ChebConfig(k=0)
+    with pytest.raises(ValueError, match="degree"):
+        ChebConfig(k=2, degree=0)
+    with pytest.raises(ValueError, match="n_signals"):
+        ChebConfig(k=2, n_signals=0)
+    with pytest.raises(ValueError, match="which"):
+        ChebConfig(k=2, which="LM")
+    assert resolved_signals(ChebConfig(k=5)) == 13
+    assert resolved_signals(ChebConfig(k=5, n_signals=3)) == 3
+
+
+def test_eigsh_rejects_oversized_sketch():
+    a_mat, _, _ = _gapped_dense(20, 2, seed=0)
+    with pytest.raises(ValueError, match="n_signals"):
+        chebyshev_eigsh(_dense_op(a_mat), ChebConfig(k=2, n_signals=25),
+                        key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="n_signals"):
+        # default R = k + 8 > n must hit the same actionable error
+        chebyshev_eigsh(_dense_op(a_mat), ChebConfig(k=15),
+                        key=jax.random.PRNGKey(0))
+
+
+def test_eigsh_dispatches_on_config_type():
+    """repro.core.lanczos.eigsh is the single solver entry: a ChebConfig
+    routes to the filter, byte-identically to calling it directly."""
+    n, k = 150, 4
+    W, coo = _sym_sparse(n, 0.08, seed=2)
+    adj = normalize_sym(coo)
+    op = CooOperator(adj)
+    cfg = ChebConfig(k=k, degree=48)
+    a = eigsh(op, cfg, key=jax.random.PRNGKey(3))
+    b = chebyshev_eigsh(op, cfg, key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(a.eigenvalues), np.asarray(b.eigenvalues))
+    np.testing.assert_array_equal(np.asarray(a.eigenvectors), np.asarray(b.eigenvectors))
+
+
+# ---------------------------------------------------------------------------
+# ARI-parity gates (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _blobs(k, n_per, d, spread=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = (rng.permutation(np.eye(k, d)) * 20.0).astype(np.float32)
+    x = np.concatenate([c + spread * rng.normal(size=(n_per, d)) for c in centers])
+    return x.astype(np.float32), np.repeat(np.arange(k), n_per)
+
+
+def test_ari_parity_blobs():
+    x, truth = _blobs(4, 60, 6, seed=0)
+    # well-separated clusters ⇒ near-disconnected graph: the Lanczos baseline
+    # needs a Krylov block for the multiplicity (DESIGN.md §3); the filter
+    # path has no such knob — the sketch is k + 8 wide by default
+    lanczos = SpectralPipeline(
+        n_clusters=4, eig=EigConfig(solver="lanczos", block_size=4))
+    cheb = SpectralPipeline(n_clusters=4, eig=EigConfig(solver="chebyshev"))
+    ari_l = adjusted_rand_index(
+        np.asarray(lanczos.run(jnp.asarray(x), jax.random.PRNGKey(0)).labels), truth)
+    ari_c = adjusted_rand_index(
+        np.asarray(cheb.run(jnp.asarray(x), jax.random.PRNGKey(0)).labels), truth)
+    assert ari_l > 0.9
+    assert ari_c >= 0.99 * ari_l, (ari_c, ari_l)
+
+
+def test_ari_parity_sbm():
+    coo, truth = sbm_graph(80, 4, 0.3, 0.02, seed=1)
+    lanczos = SpectralPipeline(n_clusters=4, eig=EigConfig(solver="lanczos"))
+    cheb = SpectralPipeline(n_clusters=4, eig=EigConfig(solver="chebyshev"))
+    ari_l = adjusted_rand_index(
+        np.asarray(lanczos.run(coo, jax.random.PRNGKey(0)).labels), truth)
+    ari_c = adjusted_rand_index(
+        np.asarray(cheb.run(coo, jax.random.PRNGKey(0)).labels), truth)
+    assert ari_l > 0.9
+    assert ari_c >= 0.99 * ari_l, (ari_c, ari_l)
+
+
+def test_ari_parity_blockell_representation():
+    """The chebyshev path through the BlockELL operator (fused cheb_step
+    Pallas epilogue on TPU, ref elsewhere) clusters identically well."""
+    coo, truth = sbm_graph(80, 3, 0.3, 0.02, seed=2)
+    cheb_coo = SpectralPipeline(n_clusters=3, eig=EigConfig(solver="chebyshev"))
+    cheb_ell = SpectralPipeline(
+        n_clusters=3, eig=EigConfig(solver="chebyshev", representation="blockell"))
+    ari_coo = adjusted_rand_index(
+        np.asarray(cheb_coo.run(coo, jax.random.PRNGKey(0)).labels), truth)
+    ari_ell = adjusted_rand_index(
+        np.asarray(cheb_ell.run(coo, jax.random.PRNGKey(0)).labels), truth)
+    assert ari_coo > 0.9
+    assert ari_ell >= 0.99 * ari_coo, (ari_ell, ari_coo)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-vs-single parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["gspmd", "shard_map"])
+def test_sharded_chebyshev_matches_single(variant):
+    coo, _ = sbm_graph(60, 4, 0.3, 0.02, seed=3)
+    sm = partition_coo_by_rows(coo, 1)
+    mesh = jax.make_mesh((1,), ("data",)) if variant == "shard_map" else None
+    single = SpectralPipeline(n_clusters=4, eig=EigConfig(solver="chebyshev"))
+    shard = SpectralPipeline(
+        n_clusters=4, eig=EigConfig(solver="chebyshev"),
+        plan=Plan(device="sharded", variant=variant, mesh=mesh))
+    a = single.run(coo, jax.random.PRNGKey(0))
+    b = shard.run(sm, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+    np.testing.assert_allclose(np.asarray(a.eigenvalues),
+                               np.asarray(b.eigenvalues), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EigConfig: new-field validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_eig_config_validates_new_fields():
+    with pytest.raises(ValueError, match="solver"):
+        EigConfig(solver="arpack")
+    with pytest.raises(ValueError, match="cheb_degree"):
+        EigConfig(cheb_degree=0)
+    with pytest.raises(ValueError, match="n_signals"):
+        EigConfig(n_signals=0)
+    with pytest.raises(ValueError, match="representation"):
+        EigConfig(representation="csr")
+
+
+def test_eig_config_json_round_trip_new_fields():
+    pipe = SpectralPipeline(
+        n_clusters=5,
+        eig=EigConfig(solver="chebyshev", cheb_degree=96, n_signals=24,
+                      lambda_cut=0.125, representation="blockell"))
+    back = SpectralPipeline.from_dict(json.loads(json.dumps(pipe.to_dict())))
+    assert back == pipe
+    assert back.eig.solver == "chebyshev"
+    assert back.eig.cheb_degree == 96
+    assert back.eig.n_signals == 24
+    assert back.eig.lambda_cut == 0.125
+    assert back.eig.representation == "blockell"

@@ -200,3 +200,45 @@ def test_property_eigenvalues_within_gershgorin(n, seed):
     vals = np.asarray(res.eigenvalues)
     assert (vals <= 1.0 + 1e-4).all() and (vals >= -1.0 - 1e-4).all()
     assert (np.diff(vals) <= 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# Basis-size validation: degenerate k/m requests fail loudly, not with a
+# shape error from inside the restart loop
+# ---------------------------------------------------------------------------
+
+def test_validate_basis_rejects_oversized_requests():
+    from repro.core.lanczos import validate_basis
+
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        validate_basis(LanczosConfig(k=0, m=10), 100)
+    with pytest.raises(ValueError, match="must exceed k"):
+        validate_basis(LanczosConfig(k=10, m=10), 100)
+    # the n_eigvecs > n//2-ish degenerate case: m + b exceeds n
+    with pytest.raises(ValueError, match="reduce"):
+        validate_basis(LanczosConfig(k=30, m=60), 50)
+    with pytest.raises(ValueError, match="two block steps"):
+        validate_basis(LanczosConfig(k=8, m=12, block_size=4), 100)
+    # the boundary m + b == n is fine
+    validate_basis(LanczosConfig(k=10, m=49), 50)
+
+
+def test_eigsh_raises_actionable_error_for_large_k():
+    """k ≈ n/2 through the public entries surfaces the actionable message."""
+    from repro.core.lanczos import eigsh
+    from repro.core.operator import CooOperator
+    from repro.core.spectral import EigConfig, SpectralPipeline
+
+    n = 40
+    _, coo = _sym_sparse(n, 0.2, seed=0)
+    adj = normalize_sym(coo)
+    with pytest.raises(ValueError, match="n_eigvecs"):
+        eigsh(CooOperator(adj), LanczosConfig(k=25, m=50),
+              key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="n_eigvecs"):
+        lanczos_topk(lambda x: spmv_coo(adj, x), n, LanczosConfig(k=25, m=50),
+                     key=jax.random.PRNGKey(0))
+    # and through the pipeline (EigConfig → LanczosConfig plumbing)
+    pipe = SpectralPipeline(n_clusters=2, eig=EigConfig(n_eigvecs=25))
+    with pytest.raises(ValueError, match="n_eigvecs"):
+        pipe.run(adj, jax.random.PRNGKey(0))

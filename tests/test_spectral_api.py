@@ -330,3 +330,50 @@ def test_argsort_gather_workaround_gate():
     expected = tuple(int("".join(c for c in p if c.isdigit()))
                      for p in jax.__version__.split(".")[:2]) < (0, 5)
     assert needs_argsort_gather_workaround() == expected
+
+
+# ---------------------------------------------------------------------------
+# BlockELL operator fast path (EigConfig.representation="blockell")
+# ---------------------------------------------------------------------------
+
+def test_blockell_representation_selects_blockell_operator():
+    from repro.core.operator import BlockEllOperator, CooOperator
+
+    coo, _ = sbm_graph(40, 3, 0.3, 0.03, seed=4)
+    pipe = SpectralPipeline(
+        n_clusters=3, eig=EigConfig(representation="blockell"))
+    state = pipe.prepare(coo)
+    assert isinstance(pipe.operator(state), BlockEllOperator)
+    # default stays COO
+    base = SpectralPipeline(n_clusters=3)
+    assert isinstance(base.operator(state), CooOperator)
+
+
+@pytest.mark.parametrize("solver", ["lanczos", "chebyshev"])
+def test_blockell_embedding_matches_coo(solver):
+    """Same graph, same key: the BlockELL fast path reproduces the COO
+    operator's labels for both solvers (the operator is mathematically the
+    same matrix; eigenvalues agree to fp tolerance)."""
+    coo, _ = sbm_graph(50, 3, 0.3, 0.03, seed=5)
+    a = SpectralPipeline(n_clusters=3, eig=EigConfig(solver=solver))
+    b = SpectralPipeline(
+        n_clusters=3, eig=EigConfig(solver=solver, representation="blockell"))
+    ra = a.run(coo, jax.random.PRNGKey(0))
+    rb = b.run(coo, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(ra.eigenvalues),
+                               np.asarray(rb.eigenvalues), atol=1e-4)
+    assert (np.asarray(ra.labels) == np.asarray(rb.labels)).mean() > 0.99
+
+
+def test_blockell_under_jit_falls_back_with_warning():
+    """csr_to_blockell is host-side numpy: a traced GraphState cannot convert
+    — the pipeline warns and keeps the COO operator instead of crashing."""
+    coo, _ = sbm_graph(40, 2, 0.3, 0.03, seed=6)
+    pipe = SpectralPipeline(
+        n_clusters=2, eig=EigConfig(representation="blockell"))
+    state = pipe.prepare(coo)
+
+    with pytest.warns(RuntimeWarning, match="blockell"):
+        out = jax.jit(lambda s, k: pipe.embed(s, k).embedding)(
+            state, jax.random.PRNGKey(0))
+    assert out.shape[1] == 2
