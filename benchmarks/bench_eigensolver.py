@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core.lanczos import (LanczosConfig, effective_basis_size, lanczos_topk,
-                                operator_passes)
+                                solver_streams, streamed_nnz)
 from repro.data.sbm import sbm_graph
 from repro.sparse.ops import normalize_sym, spmm_coo, spmv_coo
 
@@ -77,7 +77,7 @@ def block_sweep(smoke: bool = False) -> dict:
         us = time_fn(fn, jax.random.PRNGKey(0), iters=1)
         res = fn(jax.random.PRNGKey(0))
         restarts = int(res.restarts)
-        passes = operator_passes(cfg, restarts)
+        passes = solver_streams(cfg, restarts)
         ev = np.asarray(res.eigenvalues)
         if base_passes is None:
             base_passes, base_ev = passes, ev
@@ -108,8 +108,9 @@ def block_sweep(smoke: bool = False) -> dict:
 def solver_sweep(smoke: bool = False) -> dict:
     """Lanczos (b ∈ {1, 4}) vs Chebyshev filter across the "k is typically
     very large" regime (k = 64 and k = 256 planted SBM partitions).  Streams
-    are the figure of merit (:func:`repro.core.lanczos.operator_passes` vs
-    :func:`repro.core.chebyshev.operator_streams`); ARI vs the planted
+    are the figure of merit, reported through the unified
+    :func:`repro.core.lanczos.solver_streams` /
+    :func:`~repro.core.lanczos.streamed_nnz` accounting; ARI vs the planted
     partition keeps the comparison honest on label quality.
 
     All entries run on the BlockELL representation with the operator built
@@ -121,7 +122,6 @@ def solver_sweep(smoke: bool = False) -> dict:
     (``EigConfig(representation="blockell")``).
     """
     from repro.core.chebyshev import ChebConfig
-    from repro.core.chebyshev import operator_streams as cheb_streams
     from repro.core.spectral import EigConfig, SpectralPipeline
 
     # (n_per, r, p_in, p_out): k = r planted clusters, n = n_per * r
@@ -149,7 +149,7 @@ def solver_sweep(smoke: bool = False) -> dict:
 
         entries = []
 
-        def bench(eig_cfg, solver_cfg, streams_of, tag, params):
+        def bench(eig_cfg, solver_cfg, tag, params):
             pipe = SpectralPipeline(n_clusters=k, eig=eig_cfg)
             state = pipe.prepare(coo)
             op = pipe.operator(state)  # eager: host-side BlockELL conversion
@@ -157,9 +157,14 @@ def solver_sweep(smoke: bool = False) -> dict:
             us = time_fn(fn, jax.random.PRNGKey(0), iters=1)
             emb = fn(jax.random.PRNGKey(0))
             out = pipe.cluster(emb, jax.random.PRNGKey(1))
-            streams = streams_of(solver_cfg, emb)
+            # the unified accounting helper: LanczosConfig reads the executed
+            # restart count off the result, ChebConfig is static
+            streams = solver_streams(solver_cfg, int(emb.restarts))
             entry = {"solver": tag, **params, "us_embed": us,
-                     "operator_streams": streams, "ari": ari(out.labels)}
+                     "operator_streams": streams,
+                     "streamed_nnz": streamed_nnz(op, solver_cfg,
+                                                  int(emb.restarts)),
+                     "ari": ari(out.labels)}
             entries.append(entry)
             emit(f"eigensolver/solver_sweep_{tag}_n{n}_k{k}",
                  us, f"streams={streams};ari={entry['ari']:.3f}")
@@ -173,9 +178,7 @@ def solver_sweep(smoke: bool = False) -> dict:
                             representation="blockell")
             pipe = SpectralPipeline(n_clusters=k, eig=eig)
             lcfg = pipe._lanczos_config(n)
-            bench(eig, lcfg,
-                  lambda c, e: operator_passes(c, int(e.restarts)),
-                  f"lanczos_b{b}",
+            bench(eig, lcfg, f"lanczos_b{b}",
                   {"block_size": b, "m": effective_basis_size(lcfg)})
 
         degrees = (16, 32) if smoke else (32, 64)
@@ -188,8 +191,7 @@ def solver_sweep(smoke: bool = False) -> dict:
                                 n_signals=n_signals,
                                 representation="blockell")
                 ccfg = ChebConfig(k=k, degree=degree, n_signals=n_signals)
-                bench(eig, ccfg, lambda c, e: cheb_streams(c),
-                      f"chebyshev_d{degree}_R{n_signals}",
+                bench(eig, ccfg, f"chebyshev_d{degree}_R{n_signals}",
                       {"degree": degree, "n_signals": n_signals})
 
         sweeps.append({

@@ -1,0 +1,182 @@
+"""Stage 1.5 frontier: nnz reduction vs embedding quality/wall time.
+
+Sweeps ``sparsify`` ratios and ``coarsen``+``refine`` against the unreduced
+pipeline on a planted SBM, recording for each point: achieved nnz (or node)
+reduction, Stage-2 embed wall time, the reduction's own one-off cost, ARI
+vs the planted partition (and the ratio to the unreduced ARI — the ≥ 0.99×
+gate), and top-k Laplacian eigenvalue drift.  Emits ``BENCH_sparsify.json``.
+
+    PYTHONPATH=src:. python benchmarks/bench_sparsify.py [--smoke]
+
+``--smoke`` runs a CI-sized graph and *asserts* the ARI gate, so a reduction
+regression fails the job rather than silently shipping a worse frontier.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.lanczos import solver_streams, streamed_nnz
+from repro.core.reduce import (CoarsenConfig, SparsifyConfig,
+                               topk_eigenvalue_drift)
+from repro.core.spectral import EigConfig, PipelineState, SpectralPipeline
+from repro.data.sbm import sbm_graph
+
+RATIOS = (0.2, 0.3, 0.4, 0.6)
+
+
+def ari(labels, truth) -> float:
+    a = np.asarray(truth)
+    b = np.asarray(labels)
+    cont = np.zeros((a.max() + 1, int(b.max()) + 1), np.int64)
+    np.add.at(cont, (a, b), 1)
+    comb = lambda x: x * (x - 1) / 2.0
+    sum_ij = comb(cont).sum()
+    sum_a, sum_b = comb(cont.sum(1)).sum(), comb(cont.sum(0)).sum()
+    expected = sum_a * sum_b / comb(len(a))
+    max_idx = (sum_a + sum_b) / 2.0
+    return float((sum_ij - expected) / (max_idx - expected))
+
+
+def frontier(smoke: bool = False) -> dict:
+    # n ≥ 20k for the real frontier (acceptance workload); CI-sized in smoke
+    n_per, r, p_in, p_out = (120, 5, 0.3, 0.01) if smoke \
+        else (2000, 10, 0.05, 0.0005)
+    coo, truth = sbm_graph(n_per, r, p_in, p_out, seed=1, weighted=True)
+    n, k = coo.shape[0], r
+    key = jax.random.PRNGKey(0)
+    key_km = jax.random.PRNGKey(1)
+    iters = 1 if smoke else 3
+
+    pipe = SpectralPipeline(n_clusters=k,
+                            eig=EigConfig(tol=1e-4, block_size=4))
+    state = pipe.prepare(coo)
+    embed_ref = jax.jit(lambda kk: pipe.embed(state, kk))
+    us_ref = time_fn(embed_ref, key, iters=iters)
+    emb_ref = embed_ref(key)
+    ari_ref = ari(pipe.cluster(emb_ref, key_km).labels, truth)
+    lcfg = pipe._lanczos_config(n)
+    streams_ref = solver_streams(lcfg, int(emb_ref.restarts))
+    emit(f"sparsify/baseline_n{n}", us_ref,
+         f"nnz={coo.nnz};ari={ari_ref:.3f};streams={streams_ref}")
+
+    entries = [{
+        "kind": "none", "n": n, "nnz": int(coo.nnz), "us_reduce": 0.0,
+        "us_embed": us_ref, "embed_speedup": 1.0, "ari": ari_ref,
+        "ari_ratio": 1.0, "eig_drift": 0.0,
+        "operator_streams": streams_ref,
+        "streamed_nnz": streams_ref * int(coo.nnz),
+    }]
+
+    def record(kind, params, us_reduce, us_embed, emb, labels, op, scfg,
+               restarts, n_red, nnz_red):
+        a = ari(labels, truth)
+        drift = topk_eigenvalue_drift(emb_ref.eigenvalues, emb.eigenvalues, k)
+        streams = solver_streams(scfg, restarts)
+        entry = {
+            "kind": kind, **params, "n": n_red, "nnz": nnz_red,
+            "us_reduce": us_reduce, "us_embed": us_embed,
+            "embed_speedup": us_ref / us_embed, "ari": a,
+            "ari_ratio": a / ari_ref if ari_ref > 0 else float("nan"),
+            "eig_drift": drift,
+            "operator_streams": streams,
+            "streamed_nnz": streamed_nnz(op, scfg, restarts),
+        }
+        entries.append(entry)
+        emit(f"sparsify/{kind}_{'_'.join(f'{v}' for v in params.values())}_n{n}",
+             us_embed,
+             f"speedup={entry['embed_speedup']:.2f}x;ari_ratio="
+             f"{entry['ari_ratio']:.3f};drift={drift:.3f}")
+        return entry
+
+    # -- sparsify ratio sweep ------------------------------------------------
+    for ratio in RATIOS:
+        sp = SpectralPipeline(
+            n_clusters=k, eig=EigConfig(tol=1e-4, block_size=4),
+            stages=("prepare", "sparsify", "embed", "cluster"),
+            sparsify=SparsifyConfig(target_nnz_ratio=ratio))
+        st0 = PipelineState(input_graph=coo, key_embed=key,
+                            key_cluster=key_km)
+        st0 = dataclasses.replace(sp._stage_prepare(st0))
+        reduce_fn = jax.jit(lambda: sp._stage_sparsify(st0).graph)
+        us_reduce = time_fn(reduce_fn, iters=iters)
+        g_red = reduce_fn()
+        embed_red = jax.jit(lambda kk: sp.embed(g_red, kk))
+        us_embed = time_fn(embed_red, key, iters=iters)
+        emb = embed_red(key)
+        labels = sp.cluster(emb, key_km).labels
+        record("sparsify", {"target_nnz_ratio": ratio}, us_reduce, us_embed,
+               emb, labels, sp.operator(g_red), sp._lanczos_config(n),
+               int(emb.restarts), n, int(g_red.adj.nnz))
+
+    # -- coarsen + refine ----------------------------------------------------
+    cp = SpectralPipeline(
+        n_clusters=k, eig=EigConfig(tol=1e-4, block_size=4),
+        stages=("prepare", "coarsen", "embed", "refine", "cluster"),
+        coarsen=CoarsenConfig(levels=2, min_nodes=4 * k))
+    st0 = PipelineState(input_graph=coo, key_embed=key, key_cluster=key_km)
+    st0 = cp._stage_prepare(st0)
+    t0 = time.perf_counter()  # host-side compaction: one-off, timed eagerly
+    st1 = cp._stage_coarsen(st0)
+    us_reduce = (time.perf_counter() - t0) * 1e6
+    nc = st1.graph.adj.shape[0]
+
+    def coarse_embed(kk):
+        st = dataclasses.replace(st1, key_embed=kk)
+        return cp._stage_refine(cp._stage_embed(st)).embedding
+
+    embed_c = jax.jit(coarse_embed)
+    us_embed = time_fn(embed_c, key, iters=iters)
+    emb = embed_c(key)
+    labels = cp.cluster(emb, key_km).labels
+    info = st1.reductions[-1]
+    record("coarsen_refine",
+           {"levels": cp.coarsen.levels, "node_reduction":
+            round(info.n_before / info.n_after, 2)},
+           us_reduce, us_embed, emb, labels, cp.operator(st1.graph),
+           cp._lanczos_config(nc), int(emb.restarts),
+           info.n_after, info.nnz_after)
+
+    return {
+        "benchmark": "sparsify_frontier",
+        "graph": {"name": f"sbm_k{k}", "n": n, "nnz": int(coo.nnz), "k": k,
+                  "p_in": p_in, "p_out": p_out, "weighted": True},
+        "config": {"eig": "lanczos_b4_tol1e-4", "ratios": list(RATIOS)},
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized shapes")
+    args = ap.parse_args()
+
+    payload = {
+        "smoke": bool(args.smoke),
+        "sweep": frontier(smoke=args.smoke),
+    }
+    with open("BENCH_sparsify.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote BENCH_sparsify.json "
+          f"({len(payload['sweep']['entries'])} entries)")
+
+    # the quality gate (asserted in every mode so CI smoke catches drift):
+    # each reduction point must hold ARI ≥ 0.99× the unreduced pipeline
+    for e in payload["sweep"]["entries"]:
+        if e["kind"] == "none":
+            continue
+        assert e["ari_ratio"] >= 0.99, (
+            f"ARI gate violated: {e['kind']} {e.get('target_nnz_ratio', '')} "
+            f"ari_ratio={e['ari_ratio']:.4f} < 0.99")
+    print("ARI gate: all reduction points >= 0.99x unreduced")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import argparse
 import numpy as np
 import jax
 
+from repro.core.reduce import CoarsenConfig, SparsifyConfig
 from repro.core.spectral import EigConfig, SpectralPipeline
 from repro.data.sbm import sbm_graph
 
@@ -38,15 +39,35 @@ def main() -> None:
                     help="Stage-2 engine: thick-restart Lanczos (exact "
                          "eigenpairs) or the Chebyshev polynomial filter "
                          "(fixed operator-stream cost — the large-k path)")
+    ap.add_argument("--sparsify", type=float, default=None, metavar="RATIO",
+                    help="insert the Stage-1.5 sparsify stage at this "
+                         "target nnz ratio (e.g. 0.4 keeps 40%% of the "
+                         "edges, spectrum-preserving sampling)")
+    ap.add_argument("--coarsen", type=int, default=None, metavar="LEVELS",
+                    help="insert Stage-1.5 heavy-edge-matching coarsening "
+                         "(this many levels) + the paired refine lift")
     args = ap.parse_args()
 
     coo, truth = sbm_graph(args.n_per, args.clusters, args.p_in, args.p_out, seed=args.seed)
     print(f"graph: {coo.shape[0]} nodes, {coo.nnz} directed edges")
 
+    # Stage 1.5: optional reduction stages interpose in the stage DAG
+    stages = ["prepare", "embed", "cluster"]
+    kw = {}
+    if args.sparsify is not None:
+        stages.insert(1, "sparsify")
+        kw["sparsify"] = SparsifyConfig(target_nnz_ratio=args.sparsify)
+    if args.coarsen is not None:
+        stages.insert(stages.index("embed"), "coarsen")
+        stages.insert(stages.index("embed") + 1, "refine")
+        kw["coarsen"] = CoarsenConfig(levels=args.coarsen)
     pipe = SpectralPipeline(n_clusters=args.clusters,
                             eig=EigConfig(block_size=args.block_size,
-                                          solver=args.solver))
-    out = jax.jit(lambda w, key: pipe.run(w, key))(coo, jax.random.PRNGKey(args.seed))
+                                          solver=args.solver),
+                            stages=tuple(stages), **kw)
+    run = (lambda w, key: pipe.run(w, key)) if args.coarsen is not None \
+        else jax.jit(lambda w, key: pipe.run(w, key))  # coarsen is host-side
+    out = run(coo, jax.random.PRNGKey(args.seed))
 
     labels = np.asarray(out.labels)
     ev = np.asarray(out.eigenvalues)

@@ -33,10 +33,19 @@ def needs_argsort_gather_workaround(version: str | None = None) -> bool:
     """True while the pinned jax still miscompiles argsort-gather on
     partially-replicated operands (psum-doubling across unmentioned mesh
     axes; observed on 0.4.x CPU).  Gates the Stage-1 re-replication
-    workaround in :mod:`repro.core.spectral` — see the ROADMAP item
-    "Revisit the GSPMD argsort-gather miscompile": once the pin moves to
+    workaround in :mod:`repro.core.spectral` — once the pin moves to
     jax >= 0.5 this returns False and the extra all-gather disappears
     automatically.
+
+    Re-checked against the pinned jax 0.4.37 (8 virtual CPU devices,
+    ``jax.make_mesh((4, 2), ("data", "model"))``): forcing this predicate to
+    False and running the sharded raw-points pipeline
+    (``spectral_cluster_from_points_sharded``, the
+    test_sharded_points_stage1 workload) drops blob purity from > 0.95 to
+    0.42 — the [n, k] kNN results feeding graph assembly are left partially
+    replicated over the unmentioned "model" axis and the argsort gather
+    psum-doubles.  The workaround is still required at this pin; do not
+    delete it before the jax bump, just re-run the forced-off experiment.
     """
     v = _version_tuple(jax.__version__ if version is None else version)
     return v < (0, 5)

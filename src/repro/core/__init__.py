@@ -11,14 +11,22 @@ NOT re-export the function here, to avoid shadowing the submodule.
 """
 
 from repro.core.spectral import (  # noqa: F401
+    DEFAULT_STAGES,
     EigConfig,
     EmbedState,
     GraphConfig,
     GraphState,
     KMeansConfig,
     Plan,
+    PipelineState,
     SpectralPipeline,
     SpectralResult,
+)
+from repro.core.reduce import (  # noqa: F401  (Stage 1.5 — graph reduction)
+    CoarsenConfig,
+    ReduceInfo,
+    ReductionState,
+    SparsifyConfig,
 )
 from repro.core.operator import (  # noqa: F401
     BlockEllOperator,

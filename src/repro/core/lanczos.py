@@ -117,6 +117,52 @@ def operator_passes(cfg: LanczosConfig, restarts: int) -> int:
     return first + max(0, int(restarts) - 1) * steady
 
 
+def solver_streams(cfg, result=None) -> int:
+    """Unified operator-stream accounting across Stage-2 engines — THE
+    figure every bench reports, so lanczos / chebyshev / reduced-operator
+    runs are comparable on one axis.
+
+    ``cfg`` is the engine config :func:`eigsh` dispatched on:
+
+    - :class:`~repro.core.chebyshev.ChebConfig` → the statically-known
+      :func:`~repro.core.chebyshev.operator_streams` (``result`` ignored).
+    - :class:`LanczosConfig` → :func:`operator_passes`, which needs the
+      executed restart count: pass the :class:`LanczosResult` (its
+      ``restarts`` field is read) or a plain int.
+
+    One stream traverses the operator's stored entries once; multiply by
+    ``op.nnz`` (:func:`streamed_nnz`) when comparing across operator
+    *representations* or reduction levels, where per-stream cost differs.
+    """
+    from repro.core.chebyshev import ChebConfig
+    from repro.core.chebyshev import operator_streams as _cheb_streams
+
+    if isinstance(cfg, ChebConfig):
+        return _cheb_streams(cfg)
+    if not isinstance(cfg, LanczosConfig):
+        raise TypeError(
+            f"solver_streams expects a LanczosConfig or ChebConfig, got "
+            f"{type(cfg).__name__}")
+    if result is None:
+        raise ValueError(
+            "solver_streams(LanczosConfig) needs the executed restart count "
+            "— pass the LanczosResult (or an int restart count)")
+    restarts = result if isinstance(result, int) else int(result.restarts)
+    return operator_passes(cfg, restarts)
+
+
+def streamed_nnz(op, cfg, result=None) -> int:
+    """``solver_streams × op.nnz`` — total stored entries moved by Stage 2,
+    the cross-representation / cross-reduction cost figure (ELL padding and
+    shard padding count: they are streamed like real entries)."""
+    nnz = getattr(op, "nnz", None)
+    if nnz is None:
+        raise TypeError(
+            f"{type(op).__name__} exposes no nnz (closure-backed operators "
+            f"have no stored-entry count) — report solver_streams alone")
+    return solver_streams(cfg, result) * int(nnz)
+
+
 def validate_basis(cfg: LanczosConfig, n: int) -> None:
     """Eager (trace-time) sanity of the basis geometry — degenerate requests
     like ``n_eigvecs > n//2``-ish used to surface as opaque shape errors from

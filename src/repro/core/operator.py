@@ -38,6 +38,13 @@ class LinearOperator(Protocol):
     to a multi-vector block ([n, b] → [n, b]) — the block-Lanczos stream.
     Implementations may carry a ``mesh`` attribute describing where their
     collectives run (``None`` for single-device operators).
+
+    Matrix-backed implementations additionally expose ``nnz`` — the number
+    of stored entries one application streams (padding slots included, since
+    they are streamed too).  :func:`repro.core.lanczos.streamed_nnz`
+    multiplies it by the solver's stream count for the cross-representation
+    cost figure; closure-backed operators (:class:`CallableOperator`) have
+    no meaningful value and simply omit the attribute.
     """
 
     @property
@@ -66,6 +73,10 @@ class CooOperator:
     @property
     def dtype(self):
         return self.a.val.dtype
+
+    @property
+    def nnz(self) -> int:
+        return self.a.nnz
 
     def mv(self, x: Array) -> Array:
         return spmv_coo(self.a, x)
@@ -101,6 +112,12 @@ class BlockEllOperator:
     @property
     def dtype(self):
         return self.a.vals.dtype
+
+    @property
+    def nnz(self) -> int:
+        # ELL padding slots are streamed like real entries; the tail rides
+        # the segment-sum path — both count toward bytes-per-application
+        return int(self.a.vals.size) + self.a.tail.nnz
 
     def mv(self, x: Array) -> Array:
         return spmv_blockell(self.a, x)
@@ -164,6 +181,11 @@ class ShardedCooOperator:
     @property
     def dtype(self):
         return self.sm.val.dtype
+
+    @property
+    def nnz(self) -> int:
+        # per-shard padding (null edges) is streamed like real entries
+        return int(self.sm.val.shape[0])
 
     def mv(self, x: Array) -> Array:
         from repro.sparse.distributed import make_sharded_spmv, spmv_gspmd

@@ -107,13 +107,12 @@ def spectral_cluster(
     del deg  # kept for signature compatibility; never consumed
     _warn_deprecated("spectral_cluster", "SpectralPipeline.run")
     pipe = cfg.to_pipeline()
-    state = pipe.prepare(w)
     op = None
     if matvec is not None or matmat is not None:
         op = CallableOperator(n=w.shape[0], matvec=matvec, matmat=matmat)
-    key, k_eig, k_km = jax.random.split(key, 3)
-    emb = pipe.embed(state, k_eig, operator=op)
-    return pipe.cluster(emb, k_km)
+    # one call into the stage DAG — run(operator=) carries the override to
+    # the embed stage, with the same key-split order as always (bitwise)
+    return pipe.run(w, key, operator=op)
 
 
 def spectral_cluster_from_points(

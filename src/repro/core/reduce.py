@@ -1,0 +1,367 @@
+"""Stage 1.5 — spectrum-preserving graph reduction (sparsify / coarsen / refine).
+
+Every Lanczos or Chebyshev stream costs O(nnz), so shrinking the operator
+*between* graph construction and the eigensolve multiplies whatever the
+Stage-2 solver wins.  Two reductions compose with the stage DAG
+(:class:`repro.core.spectral.SpectralPipeline`, DESIGN.md §14):
+
+``sparsify``
+    Spectral edge sampling in the Spielman–Srivastava mold (Wang & Feng,
+    PAPERS.md, "Spectrum-Preserving Sparsification"): sample undirected
+    edges with probability proportional to an *effective-resistance proxy*
+    — no Laplacian solve, just ``w_e · (1/d_u + 1/d_v)``, the low-degree
+    surrogate for the leverage score ``w_e · R_eff(u, v)`` — and reweight
+    kept edges by the inverse inclusion probability (Horvitz–Thompson), so
+    the sparsified Laplacian is an (approximately) unbiased estimate of the
+    original.  A *backbone* of every vertex's heaviest incident edge — a
+    union of nearest-neighbor trees spanning all non-isolated vertices, the
+    cheap stand-in for the usual spanning-tree core — is kept with
+    probability 1 and exact weight, so cluster cores cannot disconnect.
+    Selection is Gumbel top-m over the proxy scores: exactly
+    ``target_nnz_ratio · nnz`` entries survive (static shape, jit-safe on
+    the single-device plan).
+
+``coarsen`` + ``refine``
+    Multilevel heavy-edge-matching coarsening (the standard multigrid /
+    Metis discipline): a handshake matching pairs each vertex with its
+    heaviest-weight neighbor when the choice is mutual, matched pairs merge,
+    and the coarse operator is the Galerkin triple product ``Wc = Pᵀ W P``
+    for the partition prolongation ``P`` (one 1 per fine row).  The
+    eigensolve runs on the coarse graph; ``refine`` lifts the coarse
+    embedding back through ``P`` and runs a few power-iteration smoothing
+    steps on the *fine* normalized adjacency (GPIC-style, PAPERS.md) plus
+    one Rayleigh–Ritz rotation — all through ``op.mm``, so the sharded plan
+    pays zero new collective types.
+
+Sharded composition: the matching itself (:func:`heavy_edge_matching`) is
+pure segment-ops + gathers over globally-indexed edge arrays, so per
+row-block it is local work and the matched-endpoint exchange rides the same
+gather the sharded SpMV already performs.  The *compaction* steps — merging
+matched pairs into a dense coarse id space, re-bucketing edges per shard —
+are host-side data-pipeline work (the same discipline as
+``partition_coo_by_rows`` and ``csr_to_blockell``), so the reduction stages
+need concrete arrays on the sharded plan and raise an actionable error
+under a jit trace.
+
+Quality gates (tested + recorded in ``BENCH_sparsify.json``): top-k
+Laplacian eigenvalue drift stays bounded and end-to-end ARI ≥ 0.99× the
+unreduced pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import COO, coo_from_edges
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparsifyConfig:
+    """Stage-1.5 edge-sampling knobs.
+
+    ``target_nnz_ratio`` is the fraction of (directed) nnz the sparsified
+    graph keeps — the output size is static: ``2 · floor(ratio · nnz / 2)``
+    entries.  ``seed`` drives the Gumbel selection keys (static, so the
+    sampled graph is reproducible and serializable).  ``backbone`` keeps
+    every vertex's heaviest incident edge with probability 1 / exact weight
+    (connectivity insurance; switch off only for sampling-theory
+    experiments).
+    """
+
+    target_nnz_ratio: float = 0.4
+    seed: int = 0
+    backbone: bool = True
+
+    def __post_init__(self):
+        if not 0.0 < self.target_nnz_ratio <= 1.0:
+            raise ValueError(
+                f"SparsifyConfig.target_nnz_ratio must be in (0, 1], got "
+                f"{self.target_nnz_ratio}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenConfig:
+    """Stage-1.5 multilevel coarsening knobs.
+
+    ``levels`` heavy-edge-matching rounds run back to back (each level
+    roughly halves the matched portion of the graph); coarsening stops
+    early when the node count drops below ``min_nodes`` or a level stalls
+    (< 5% reduction).  ``rounds`` is the number of handshake-matching
+    sweeps per level (2 catches most of the weight a greedy sequential HEM
+    would).  ``refine_steps`` is the number of power-iteration smoothing
+    passes the paired ``refine`` stage runs on the fine operator after
+    lifting.
+    """
+
+    levels: int = 1
+    rounds: int = 2
+    refine_steps: int = 2
+    min_nodes: int = 64
+
+    def __post_init__(self):
+        if self.levels < 1:
+            raise ValueError(f"CoarsenConfig.levels must be >= 1, got {self.levels}")
+        if self.rounds < 1:
+            raise ValueError(f"CoarsenConfig.rounds must be >= 1, got {self.rounds}")
+        if self.refine_steps < 0:
+            raise ValueError(
+                f"CoarsenConfig.refine_steps must be >= 0, got {self.refine_steps}")
+        if self.min_nodes < 2:
+            raise ValueError(
+                f"CoarsenConfig.min_nodes must be >= 2, got {self.min_nodes}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ReduceInfo(NamedTuple):
+    """Provenance numbers a reduction stage leaves in the pipeline state."""
+
+    kind: str  # "sparsify" | "coarsen"
+    n_before: int
+    n_after: int
+    nnz_before: int
+    nnz_after: int
+
+
+class ReductionState(NamedTuple):
+    """What ``refine`` needs to lift a coarse embedding back to the fine
+    graph: the fine-level Stage-1 state and the fine→coarse partition map.
+    ``prolong`` is ``None`` for reductions that keep the node set
+    (sparsify)."""
+
+    fine_graph: object  # repro.core.spectral.GraphState (lazy-import cycle)
+    prolong: Optional[Array]  # [n_fine] int32 coarse id per fine node
+    info: ReduceInfo
+
+
+# ---------------------------------------------------------------------------
+# Sparsify — effective-resistance-proxy edge sampling
+# ---------------------------------------------------------------------------
+
+def sparsify_coo(w: COO, cfg: SparsifyConfig) -> COO:
+    """Sample a spectrum-preserving subgraph of the symmetric raw-weight
+    graph ``w``: Gumbel top-m over undirected (upper-triangle) entries
+    scored by ``w_e · (1/d_u + 1/d_v)``, Horvitz–Thompson reweighting
+    ``ŵ_e = w_e / min(1, m·p_e)``, backbone edges kept exact.
+
+    jit-safe: the output is a static-``2m``-entry COO (both orientations of
+    every sampled undirected edge), row-sorted on device.  Duplicate
+    coordinates in ``w`` are treated as parallel edges (our segment-sum
+    consumers sum them, which is exactly the parallel-edge semantics the
+    sampling theory assumes).
+    """
+    from repro.sparse.ops import degrees, sort_coo_rows
+
+    nnz = w.nnz
+    m = target_upper_count(nnz, cfg.target_nnz_ratio)
+
+    deg = degrees(w).astype(jnp.float32)
+    d = jnp.maximum(deg, 1e-30)
+    val = w.val.astype(jnp.float32)
+    upper = (w.row < w.col) & (val > 0)
+
+    # effective-resistance proxy: leverage ≈ w_e · (R_u + R_v) with the
+    # low-degree surrogate R_u ≈ 1/d_u (exact on stars, an overestimate on
+    # well-connected pairs — oversampling relative to true leverage is the
+    # safe direction for spectral guarantees)
+    score = jnp.where(upper, val * (1.0 / d[w.row] + 1.0 / d[w.col]), 0.0)
+
+    if cfg.backbone:
+        # per-vertex heaviest incident edge (symmetric storage puts every
+        # incident edge in the vertex's own rows, so a row segment-max sees
+        # them all); an upper entry is backbone if it is the max for either
+        # endpoint — a union of nearest-neighbor trees covering every
+        # non-isolated vertex
+        rowmax = jax.ops.segment_max(val, w.row, num_segments=w.shape[0])
+        backbone = upper & ((val >= rowmax[w.row]) | (val >= rowmax[w.col]))
+    else:
+        backbone = jnp.zeros_like(upper)
+
+    # sampled portion: renormalized proxy distribution over non-backbone
+    s_nb = jnp.where(backbone, 0.0, score)
+    p_nb = s_nb / jnp.maximum(s_nb.sum(), 1e-30)
+    n_backbone = backbone.sum()
+    m_sample = jnp.maximum(jnp.asarray(float(m), jnp.float32) - n_backbone, 1.0)
+
+    # Gumbel top-m = weighted sampling without replacement by p; backbone
+    # keys pinned to +inf so they always survive with π = 1
+    g = jax.random.gumbel(jax.random.PRNGKey(cfg.seed), (nnz,), jnp.float32)
+    logp = jnp.where(s_nb > 0, jnp.log(jnp.maximum(p_nb, 1e-38)), -jnp.inf)
+    keys = jnp.where(backbone, jnp.inf, logp + g)
+    _, sel = jax.lax.top_k(keys, m)
+
+    # Horvitz–Thompson: π_e = min(1, m'·p_e) (the Poisson approximation to
+    # the top-m inclusion probability), π = 1 on the backbone
+    pi = jnp.where(backbone, 1.0, jnp.clip(m_sample * p_nb, 1e-12, 1.0))
+    val_new = jnp.where(score + jnp.where(backbone, 1.0, 0.0) > 0,
+                        val / pi, 0.0)
+
+    r, c, v = w.row[sel], w.col[sel], val_new[sel]
+    out = COO(
+        row=jnp.concatenate([r, c]),
+        col=jnp.concatenate([c, r]),
+        val=jnp.concatenate([v, v]).astype(w.val.dtype),
+        shape=w.shape,
+        sorted_rows=False,
+    )
+    return sort_coo_rows(out)
+
+
+def target_upper_count(nnz: int, ratio: float) -> int:
+    """Static number of undirected edges a sparsify pass keeps (the output
+    COO holds both orientations: ``2 ·`` this)."""
+    return max(1, min(nnz // 2, int(ratio * nnz) // 2))
+
+
+# ---------------------------------------------------------------------------
+# Coarsen — heavy-edge matching + Galerkin triple product
+# ---------------------------------------------------------------------------
+
+def heavy_edge_matching(row: Array, col: Array, val: Array, n: int,
+                        *, rounds: int = 2) -> Array:
+    """Handshake heavy-edge matching over globally-indexed COO arrays.
+
+    Each round: every unmatched vertex proposes to its heaviest-weight
+    unmatched neighbor (per-row segment-max, ties broken toward the lowest
+    column id); a pair matches when the proposal is mutual.  Returns
+    ``match[u]`` = partner id (``u`` itself when unmatched) — an involution
+    by construction.
+
+    Pure segment ops + gathers, so it runs unchanged on row-sharded edge
+    arrays: the per-row reductions are shard-local and the ``prop[prop]``
+    handshake gather is the same collective the sharded SpMV already pays
+    (no new collective types).
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    match = idx
+    unmatched = jnp.ones((n,), bool)
+    valf = val.astype(jnp.float32)
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+
+    for _ in range(rounds):
+        ok = unmatched[row] & unmatched[col] & (row != col) & (valf > 0)
+        ev = jnp.where(ok, valf, neg)
+        best = jax.ops.segment_max(ev, row, num_segments=n)
+        is_best = ok & (ev >= best[row])
+        cand = jnp.where(is_best, col, n)
+        best_col = jax.ops.segment_min(cand, row, num_segments=n)  # n if none
+        prop = jnp.where(best_col < n, best_col, idx).astype(jnp.int32)
+        mutual = prop[prop] == idx
+        newly = mutual & (prop != idx) & unmatched
+        match = jnp.where(newly, prop, match)
+        unmatched = unmatched & ~newly
+    return match
+
+
+def coarsen_coo(w: COO, cfg: CoarsenConfig) -> Tuple[COO, np.ndarray]:
+    """Multilevel HEM coarsening of a symmetric raw-weight graph.
+
+    Returns ``(w_coarse, prolong)`` where ``prolong[u] ∈ [0, n_coarse)`` is
+    the coarse id of fine node ``u`` — the partition prolongation ``P``
+    (one 1 per fine row), and ``w_coarse = Pᵀ w P`` with duplicates summed
+    (intra-pair edges become coarse self-loops, which keeps the Galerkin
+    operator's spectrum honest).
+
+    Host-side data-pipeline work (dense coarse ids need a dynamic-size
+    unique): requires concrete arrays and raises under a jit trace — the
+    same discipline as ``csr_to_blockell``.
+    """
+    try:
+        row = np.asarray(w.row)
+        col = np.asarray(w.col)
+        val = np.asarray(w.val, np.float64)
+    except jax.errors.TracerArrayConversionError as e:
+        raise TypeError(
+            "coarsen needs concrete graph arrays (the coarse id compaction "
+            "is host-side, like csr_to_blockell) — run the reduction stage "
+            "eagerly and jit the embed/cluster stages on the coarse state"
+        ) from e
+    n = w.shape[0]
+    prolong = np.arange(n, dtype=np.int64)
+
+    for _ in range(cfg.levels):
+        if n <= cfg.min_nodes:
+            break
+        match = np.asarray(
+            heavy_edge_matching(jnp.asarray(row), jnp.asarray(col),
+                                jnp.asarray(val.astype(np.float32)), n,
+                                rounds=cfg.rounds))
+        rep = np.minimum(np.arange(n), match)  # pair representative
+        uniq, dense = np.unique(rep, return_inverse=True)
+        nc = uniq.size
+        if nc >= int(0.95 * n):  # stalled: nothing left worth matching
+            break
+        prolong = dense[prolong]
+        # Galerkin triple product on the partition: remap + sum duplicates
+        merged = coo_from_edges(dense[row], dense[col], val, (nc, nc),
+                                sum_duplicates=True, dtype=w.val.dtype)
+        row = np.asarray(merged.row)
+        col = np.asarray(merged.col)
+        val = np.asarray(merged.val, np.float64)
+        n = nc
+
+    wc = coo_from_edges(row, col, val, (n, n), dtype=w.val.dtype)
+    return wc, prolong.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Refine — lift + power-iteration smoothing + Rayleigh–Ritz
+# ---------------------------------------------------------------------------
+
+def lift_and_smooth(op, u0: Array, *, steps: int = 2
+                    ) -> Tuple[Array, Array, Array]:
+    """GPIC-style refinement: smooth the lifted coarse basis with ``steps``
+    power iterations of the fine normalized adjacency, orthonormalize, and
+    Rayleigh–Ritz once.
+
+    Returns ``(u, theta, residuals)``: an [n, k] orthonormal Ritz basis of
+    the fine operator (columns descending by Ritz value), the [k] Ritz
+    values, and the Ritz residual norms ``‖A u − θ u‖`` (the accuracy
+    diagnostic the EmbedState contract carries).  Cost: ``steps + 1``
+    operator streams, all through ``op.mm`` — on a sharded operator that is
+    the existing one-gather-per-application SpMM.
+    """
+    f32 = jnp.float32
+    u = u0.astype(f32)
+    for _ in range(max(0, steps)):
+        u = op.mm(u).astype(f32)
+    q, _ = jnp.linalg.qr(u)
+    aq = op.mm(q).astype(f32)  # the Rayleigh–Ritz stream
+    b = q.T @ aq
+    b = 0.5 * (b + b.T)
+    theta, s = jnp.linalg.eigh(b)  # ascending
+    sel = s[:, ::-1]  # descending
+    u = q @ sel
+    vals = theta[::-1]
+    resid = jnp.linalg.norm(aq @ sel - u * vals[None, :], axis=0)
+    return u, vals, resid
+
+
+# ---------------------------------------------------------------------------
+# Quality diagnostics (tests + BENCH_sparsify.json)
+# ---------------------------------------------------------------------------
+
+def topk_eigenvalue_drift(vals_ref: Array, vals_red: Array, k: int) -> float:
+    """Max relative drift of the top-k (Laplacian) eigenvalues between an
+    unreduced and a reduced run — the spectral gate the reduction stages are
+    held to (scale: the largest reference magnitude, so near-zero leading
+    Laplacian eigenvalues don't blow the ratio up)."""
+    a = np.asarray(vals_ref, np.float64)[:k]
+    b = np.asarray(vals_red, np.float64)[:k]
+    kk = min(a.size, b.size)
+    scale = max(float(np.abs(a).max(initial=0.0)), 1e-12)
+    return float(np.abs(a[:kk] - b[:kk]).max(initial=0.0) / scale)

@@ -19,6 +19,16 @@ Stage boundaries are real state objects, so serving-shaped reuse is free:
 ``pipe.cluster(emb, key, n_clusters=2 * k)`` re-clusters a cached embedding
 at a different k without re-entering the eigensolver.
 
+The facade is literally a stage DAG: ``run`` threads a typed
+:class:`PipelineState` through the ordered ``stages`` tuple (default
+``("prepare", "embed", "cluster")``), and graph-reduction stages from
+:mod:`repro.core.reduce` interpose without forking the API::
+
+    pipe = SpectralPipeline(n_clusters=8,
+                            stages=("prepare", "sparsify", "embed", "cluster"),
+                            sparsify=SparsifyConfig(target_nnz_ratio=0.4))
+    out  = pipe.run(x, key)   # Stage 1.5 shrinks the operator before Stage 2
+
 Plan dispatch replaces the old parallel ``_sharded`` code paths: the same
 stage graph runs on one device (``Plan()``), over a row-partitioned
 :class:`~repro.sparse.distributed.ShardedCOO` (operator collectives chosen
@@ -30,23 +40,36 @@ matvec/matmat closures anywhere in the stage graph.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.core.kmeans as km
 import repro.core.lanczos as lz
 import repro.core.laplacian as lap
 from repro.compat import needs_argsort_gather_workaround
 from repro.core.operator import CooOperator, LinearOperator, ShardedCooOperator
+from repro.core.reduce import (
+    CoarsenConfig,
+    ReduceInfo,
+    ReductionState,
+    SparsifyConfig,
+)
 from repro.kernels.lsh_candidates.ops import (
     DEFAULT_N_BITS as _DEFAULT_LSH_BITS,
     DEFAULT_N_TABLES as _DEFAULT_LSH_TABLES,
     MAX_N_BITS as _MAX_LSH_BITS,
 )
 from repro.core.similarity import build_knn_graph, graph_from_knn
-from repro.sparse.distributed import ShardedCOO, normalize_sharded, spmv_gspmd
+from repro.sparse.distributed import (
+    ShardedCOO,
+    global_rows,
+    normalize_sharded,
+    partition_coo_by_rows,
+    spmv_gspmd,
+)
 from repro.sparse.formats import COO
 
 Array = jax.Array
@@ -306,6 +329,89 @@ class EmbedState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
+# The stage DAG
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineState:
+    """The typed value the stage DAG threads: every stage is a named
+    transform ``PipelineState → PipelineState`` that fills (or replaces) the
+    slots it owns and appends to ``provenance``.
+
+    The slots are exactly the resumable checkpoints the facade already
+    exposed — ``graph`` is a :class:`GraphState`, ``embedding`` an
+    :class:`EmbedState`, ``result`` a :class:`SpectralResult` — plus the
+    reduction bookkeeping (:class:`~repro.core.reduce.ReductionState`) that
+    ``refine`` consumes and the per-stage PRNG keys ``run`` splits up front
+    (one split, fixed order, so the default stage tuple is bitwise-identical
+    to the pre-DAG pipeline).
+    """
+
+    points: Optional[Array] = None  # raw [n, d] features (Stage-1 input)
+    search_points: Optional[Array] = None  # optional separate kNN coordinates
+    input_graph: Union[COO, ShardedCOO, None] = None  # prebuilt graph input
+    graph: Optional[GraphState] = None  # Stage-1 (or reduced) output
+    embedding: Optional[EmbedState] = None  # Stage-2 output
+    result: Optional["SpectralResult"] = None  # Stage-3 output
+    reduction: Optional[ReductionState] = None  # coarsen→refine hand-off
+    reductions: Tuple[ReduceInfo, ...] = ()  # all reduction provenance numbers
+    key_embed: Optional[Array] = None  # Stage-2 PRNG key
+    key_cluster: Optional[Array] = None  # Stage-3 PRNG key
+    operator_override: Optional[LinearOperator] = None  # embed operator=
+    provenance: Tuple[str, ...] = ()  # executed-stage trail (human-readable)
+
+
+# Canonical stage order.  ``stages`` must be a subsequence of this: the
+# reductions sit between graph construction and the eigensolve (Stage 1.5),
+# and refine — the coarse→fine lift — must follow embed.
+_STAGE_ORDER = ("prepare", "sparsify", "coarsen", "embed", "refine", "cluster")
+_REQUIRED_STAGES = ("prepare", "embed", "cluster")
+DEFAULT_STAGES = ("prepare", "embed", "cluster")
+
+
+def _raw_weights(state: GraphState, *, host_compact: bool = False) -> COO:
+    """Recover the raw similarity weights from a Stage-1 state by undoing the
+    sym normalization: ``W = D^{1/2} A_sym D^{1/2}`` entrywise (``adj`` is
+    ``D^{-1/2} W D^{-1/2}`` and ``deg`` is kept exactly for this).
+
+    The reduction stages resample/merge *raw* weights and then re-derive
+    degrees + normalization on the reduced graph — reusing :meth:`
+    SpectralPipeline.prepare` so reduced states satisfy the same invariants
+    (v0 = √deg, NJW row maps) as unreduced ones.
+
+    ``host_compact=True`` (the sharded paths, which re-bucket host-side
+    anyway) additionally drops the null padding edges so reduction ratios
+    are measured on real nnz; it needs concrete arrays.
+    """
+    sq = jnp.sqrt(jnp.maximum(state.deg.astype(jnp.float32), 0.0))
+    adj = state.adj
+    if isinstance(adj, ShardedCOO):
+        grow = global_rows(adj)
+        val = adj.val.astype(jnp.float32) * sq[grow] * sq[adj.col]
+        w = COO(row=grow, col=adj.col, val=val, shape=adj.shape,
+                sorted_rows=False)
+    else:
+        val = adj.val.astype(jnp.float32) * sq[adj.row] * sq[adj.col]
+        w = COO(row=adj.row, col=adj.col, val=val, shape=adj.shape,
+                sorted_rows=adj.sorted_rows)
+    if host_compact:
+        try:
+            row = np.asarray(w.row)
+            col = np.asarray(w.col)
+            val = np.asarray(w.val)
+        except jax.errors.TracerArrayConversionError as e:
+            raise TypeError(
+                "the sharded reduction stages re-bucket edges host-side "
+                "(partition_coo_by_rows) and need concrete graph arrays — "
+                "run the reduction eagerly, then jit embed/cluster on the "
+                "reduced state") from e
+        keep = val != 0
+        w = COO(row=jnp.asarray(row[keep]), col=jnp.asarray(col[keep]),
+                val=jnp.asarray(val[keep]), shape=w.shape, sorted_rows=False)
+    return w
+
+
+# ---------------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------------
 
@@ -324,6 +430,9 @@ class SpectralPipeline:
     eig: EigConfig = EigConfig()
     kmeans: KMeansConfig = KMeansConfig()
     plan: Plan = Plan()
+    stages: Tuple[str, ...] = DEFAULT_STAGES  # ordered stage DAG
+    sparsify: SparsifyConfig = SparsifyConfig()  # Stage-1.5 edge sampling
+    coarsen: CoarsenConfig = CoarsenConfig()  # Stage-1.5 HEM + refine knobs
 
     def __post_init__(self):
         if self.n_clusters < 1:
@@ -335,6 +444,34 @@ class SpectralPipeline:
                 f"n_clusters={self.n_clusters} — leave k unset (the pipeline "
                 f"fills it) or pass n_clusters= to cluster() to re-cluster "
                 f"at a different k")
+        stages = tuple(self.stages)
+        object.__setattr__(self, "stages", stages)  # list → tuple (from_dict)
+        unknown = [s for s in stages if s not in _STAGE_ORDER]
+        if unknown:
+            raise ValueError(
+                f"SpectralPipeline.stages contains unknown stage(s) "
+                f"{unknown} — known stages (canonical order): {_STAGE_ORDER}")
+        if len(set(stages)) != len(stages):
+            raise ValueError(
+                f"SpectralPipeline.stages has duplicates: {stages}")
+        ranks = [_STAGE_ORDER.index(s) for s in stages]
+        if ranks != sorted(ranks):
+            raise ValueError(
+                f"SpectralPipeline.stages must follow the canonical order "
+                f"{_STAGE_ORDER} (reductions between prepare and embed, "
+                f"refine after embed), got {stages}")
+        missing = [s for s in _REQUIRED_STAGES if s not in stages]
+        if missing:
+            raise ValueError(
+                f"SpectralPipeline.stages must include {_REQUIRED_STAGES} "
+                f"(missing {missing}) — run stages individually via "
+                f"prepare/embed/cluster for partial execution")
+        if ("coarsen" in stages) != ("refine" in stages):
+            raise ValueError(
+                "coarsen and refine are paired: coarsen shrinks the node set "
+                "so cluster needs refine's coarse→fine lift (and refine has "
+                "no prolongation map without coarsen) — include both or "
+                "neither")
 
     # -- config plumbing ----------------------------------------------------
 
@@ -557,26 +694,156 @@ class SpectralPipeline:
                                       axis=plan.axis)
         return km.kmeans(h, kcfg, key)
 
+    # -- the stage DAG ------------------------------------------------------
+
+    def _stage_prepare(self, st: PipelineState) -> PipelineState:
+        if st.input_graph is not None:
+            g = self.prepare(st.input_graph)
+        elif st.points is not None:
+            g = self.build_graph(st.points, points=st.search_points)
+        else:
+            raise ValueError(
+                "the prepare stage needs a PipelineState with points= or "
+                "input_graph= set")
+        return dataclasses.replace(
+            st, graph=g, provenance=st.provenance + ("prepare",))
+
+    def _stage_sparsify(self, st: PipelineState) -> PipelineState:
+        from repro.core import reduce as red
+
+        if st.graph is None:
+            raise ValueError("sparsify runs after prepare (no graph in state)")
+        sharded = isinstance(st.graph.adj, ShardedCOO)
+        w = _raw_weights(st.graph, host_compact=sharded)
+        ws = red.sparsify_coo(w, self.sparsify)
+        nnz_after = ws.nnz
+        if sharded:
+            # re-bucket onto the same mesh layout (host-side, like the
+            # original partitioning) — shard count is preserved, so the
+            # plan's collectives are unchanged
+            ws = partition_coo_by_rows(ws, st.graph.adj.num_shards)
+        g = self.prepare(ws)
+        info = ReduceInfo(kind="sparsify", n_before=w.shape[0],
+                          n_after=w.shape[0], nnz_before=w.nnz,
+                          nnz_after=nnz_after)
+        return dataclasses.replace(
+            st, graph=g, reductions=st.reductions + (info,),
+            provenance=st.provenance
+            + (f"sparsify[nnz {info.nnz_before}→{info.nnz_after}]",))
+
+    def _stage_coarsen(self, st: PipelineState) -> PipelineState:
+        from repro.core import reduce as red
+
+        if st.graph is None:
+            raise ValueError("coarsen runs after prepare (no graph in state)")
+        sharded = isinstance(st.graph.adj, ShardedCOO)
+        w = _raw_weights(st.graph, host_compact=sharded)
+        wc, prolong = red.coarsen_coo(w, self.coarsen)
+        info = ReduceInfo(kind="coarsen", n_before=w.shape[0],
+                          n_after=wc.shape[0], nnz_before=w.nnz,
+                          nnz_after=wc.nnz)
+        if sharded:
+            wc = partition_coo_by_rows(wc, st.graph.adj.num_shards)
+        g = self.prepare(wc)
+        reduction = ReductionState(fine_graph=st.graph,
+                                   prolong=jnp.asarray(prolong), info=info)
+        return dataclasses.replace(
+            st, graph=g, reduction=reduction,
+            reductions=st.reductions + (info,),
+            provenance=st.provenance
+            + (f"coarsen[n {info.n_before}→{info.n_after}]",))
+
+    def _stage_embed(self, st: PipelineState) -> PipelineState:
+        if st.graph is None:
+            raise ValueError("embed runs after prepare (no graph in state)")
+        if st.key_embed is None:
+            raise ValueError("embed needs PipelineState.key_embed")
+        emb = self.embed(st.graph, st.key_embed,
+                         operator=st.operator_override)
+        return dataclasses.replace(
+            st, embedding=emb, provenance=st.provenance + ("embed",))
+
+    def _stage_refine(self, st: PipelineState) -> PipelineState:
+        from repro.core import reduce as red
+
+        if st.reduction is None or st.reduction.prolong is None:
+            raise ValueError(
+                "refine needs the coarsen stage's ReductionState (prolong "
+                "map) in the PipelineState — stage order is prepare → "
+                "coarsen → embed → refine → cluster")
+        if st.embedding is None:
+            raise ValueError("refine runs after embed (no embedding in state)")
+        fine = st.reduction.fine_graph
+        # lift through the partition prolongation, smooth on the *fine*
+        # operator (GPIC-style), re-map to NJW rows with fine degrees
+        u0 = st.embedding.embedding[st.reduction.prolong]
+        op = self.operator(fine)
+        u, theta, resid = red.lift_and_smooth(
+            op, u0, steps=self.coarsen.refine_steps)
+        emb = EmbedState(
+            embedding=lap.embed_rows(u, fine.inv_sqrt_deg),
+            eigenvalues=lap.smallest_laplacian_eigs_from_adj(theta),
+            residuals=resid,
+            restarts=st.embedding.restarts,
+        )
+        return dataclasses.replace(
+            st, graph=fine, embedding=emb, reduction=None,
+            provenance=st.provenance + ("refine",))
+
+    def _stage_cluster(self, st: PipelineState) -> PipelineState:
+        if st.embedding is None:
+            raise ValueError("cluster runs after embed (no embedding in state)")
+        if st.key_cluster is None:
+            raise ValueError("cluster needs PipelineState.key_cluster")
+        res = self.cluster(st.embedding, st.key_cluster)
+        return dataclasses.replace(
+            st, result=res, provenance=st.provenance + ("cluster",))
+
+    def run_stages(self, state: PipelineState) -> PipelineState:
+        """Execute the configured stage DAG over a :class:`PipelineState` —
+        the spelled-out form of :meth:`run` (which builds the initial state,
+        splits the keys, and returns ``state.result``).  Each stage is the
+        ``_stage_<name>`` method; the tuple was validated at construction to
+        be a canonical-order subsequence with the required stages present."""
+        for name in self.stages:
+            state = getattr(self, f"_stage_{name}")(state)
+        return state
+
     # -- end to end ---------------------------------------------------------
 
     def run(self, data: Union[Array, COO, ShardedCOO], key: Array, *,
-            points: Optional[Array] = None) -> SpectralResult:
-        """Points/graph in, labels out — all three stages under one call.
+            points: Optional[Array] = None,
+            operator: Optional[LinearOperator] = None) -> SpectralResult:
+        """Points/graph in, labels out — the whole stage DAG under one call.
 
         ``data`` may be raw points ([n, d] array → Stage 1 runs), a COO
         similarity graph, or a row-partitioned ShardedCOO (pod operator).
+        ``operator`` overrides the plan-chosen Stage-2 operator (forwarded
+        to :meth:`embed` — the deprecation shims route their prebuilt
+        operators through here).
+
+        The key is split once, up front, in the same order as the pre-DAG
+        pipeline — labels on the default stage tuple are bitwise-identical.
         """
         if isinstance(data, (COO, ShardedCOO)):
             if points is not None:
                 raise ValueError(
                     "points= only applies to Stage 1 (raw-points input); a "
                     "prebuilt graph already fixed its neighbor structure")
-            state = self.prepare(data)
+            state = PipelineState(input_graph=data)
         else:
-            state = self.build_graph(data, points=points)
+            state = PipelineState(points=data, search_points=points)
+        if operator is not None and ("sparsify" in self.stages
+                                     or "coarsen" in self.stages):
+            raise ValueError(
+                "operator= overrides the Stage-2 operator for the *input* "
+                "graph, but a reduction stage replaces that graph — drop "
+                "the override or the reduction stages")
         key, k_eig, k_km = jax.random.split(key, 3)
-        emb = self.embed(state, k_eig)
-        return self.cluster(emb, k_km)
+        state = dataclasses.replace(state, key_embed=k_eig,
+                                    key_cluster=k_km,
+                                    operator_override=operator)
+        return self.run_stages(state).result
 
     # -- serialization ------------------------------------------------------
 
@@ -589,6 +856,9 @@ class SpectralPipeline:
             "eig": self.eig.to_dict(),
             "kmeans": dataclasses.asdict(self.kmeans),
             "plan": self.plan.to_dict(),
+            "stages": list(self.stages),
+            "sparsify": self.sparsify.to_dict(),
+            "coarsen": self.coarsen.to_dict(),
         }
 
     @classmethod
@@ -599,4 +869,8 @@ class SpectralPipeline:
             eig=EigConfig(**d.get("eig", {})),
             kmeans=KMeansConfig(**d.get("kmeans", {})),
             plan=Plan.from_dict(d.get("plan", {}), mesh=mesh),
+            # pre-DAG config blobs carry no stage keys → the default tuple
+            stages=tuple(d.get("stages", DEFAULT_STAGES)),
+            sparsify=SparsifyConfig(**d.get("sparsify", {})),
+            coarsen=CoarsenConfig(**d.get("coarsen", {})),
         )
