@@ -21,6 +21,23 @@ _install_hypothesis_stub()
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Release compiled executables between test modules.
+
+    jaxlib's CPU client keeps every JIT'd executable mmap'd for the life of
+    the process (~190 mappings per pipeline-sized test).  A full-suite run
+    crosses the kernel's ``vm.max_map_count`` default (65530) around test
+    ~310 and LLVM's JIT segfaults on the failed mmap inside
+    ``backend_compile``.  Clearing per module bounds the map count at the
+    largest single module while keeping within-module compile caching.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(autouse=True)
 def _reset_kmeans_fallback_warnings():
     """Warn-once state must not leak across tests (repro.core.kmeans keeps a

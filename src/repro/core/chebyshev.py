@@ -52,6 +52,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lanczos import LanczosResult
 
@@ -390,6 +391,24 @@ def chebyshev_eigsh(op, cfg: ChebConfig, *, v0: Optional[Array] = None,
         restarts=jnp.asarray(0),
         converged=jnp.asarray(True),
     )
+
+
+def diverged(laplacian_eigenvalues, *, slack: float = 0.5) -> bool:
+    """Host-side bounds-containment check on a finished filter embedding.
+
+    The three-term recurrence diverges *geometrically* when a true
+    eigenvalue escapes the estimated ``[lo, hi]`` interval (the mapped
+    |t| > 1 regime), so a containment miss is detectable post-hoc: Ritz
+    values of the sym-normalized adjacency live in [-1, 1] (Laplacian form
+    in [0, 2]); non-finite or far-outside values mean the bounds estimator
+    missed and the subspace is garbage, not merely inaccurate.  Consumed by
+    the embed-stage escalation controller (widen ``margin`` → fall back to
+    Lanczos).  Needs concrete values — call outside jit.
+    """
+    vals = np.asarray(laplacian_eigenvalues)
+    if not np.isfinite(vals).all():
+        return True
+    return bool(np.max(np.abs(1.0 - vals)) > 1.0 + slack)
 
 
 class _signed:

@@ -188,6 +188,14 @@ def kmeans_sharded(
             "kmeans_sharded runs the fused one-pass engine only (the "
             "two-pass modes stay on the GSPMD formulation via km.kmeans); "
             f"got KMeansConfig.iter={cfg.iter!r}")
+    if cfg.empty != "keep":
+        raise ValueError(
+            "kmeans_sharded keeps the paper's empty-cluster policy: the "
+            "packed [k, d+2] psum carries no global farthest-point view, so "
+            "KMeansConfig(empty='reseed_farthest') would need an extra "
+            "collective per iteration — use the GSPMD plan (variant='gspmd') "
+            "or single-device kmeans for reseeding; got "
+            f"empty={cfg.empty!r}")
     if cfg.k is None:
         raise ValueError("KMeansConfig.k is unset — standalone kmeans_sharded "
                          "needs an explicit k (use cfg.resolved(k))")

@@ -1,0 +1,287 @@
+"""Pipeline-wide fail-soft layer: health guards, stage reports, typed errors.
+
+The paper's ARPACK reverse-communication interface *reports* breakdown and
+non-convergence (``info`` codes) and lets the caller react; our jax
+reimplementation computes the analogous signals
+(:class:`~repro.core.lanczos.LanczosResult.converged`, residual norms) but —
+before this module — nothing in the pipeline read them.  This module gives
+every stage a defined failure surface:
+
+* **jit-safe health signals** — :func:`nonfinite_count`,
+  :func:`graph_signals`, :func:`embedding_signals` return scalar arrays and
+  trace cleanly, so a jitted ``run`` can still *carry* health in its output
+  for post-hoc enforcement (:func:`result_problems`, used by the serve loop);
+* **eager guards** — :func:`check_points` / :func:`check_graph` raise a
+  structured :class:`PipelineError` on concrete inputs and no-op under a
+  trace (raising on a traced value is impossible by construction);
+* **StageReport** — the typed per-stage record (attempts, escalation-ladder
+  trail, converged flag, residual summary, wall time) threaded through
+  :class:`~repro.core.spectral.PipelineState` and returned on
+  :class:`~repro.core.spectral.SpectralResult.reports`.  Registered as a
+  pytree (numeric diagnostics are children, the stage name and ladder trail
+  are static), so reports cross jit boundaries;
+* **PipelineError** — the terminal failure: names the stage, the exhausted
+  recovery ladder, and a remedy, so an operator knows what to change.
+
+Control discipline (DESIGN.md §15): escalation — retrying a stage with a
+widened config — is *host-driven*.  It needs concrete values (a traced
+``converged`` cannot steer a Python retry loop, and a widened Krylov basis
+changes static shapes), so the escalation controllers in
+:class:`~repro.core.spectral.SpectralPipeline` activate only when stage
+outputs are concrete (eager execution, the serving default).  Under a jit
+trace the controllers degrade to signals-only: one attempt, report fields
+traced, enforcement deferred to the caller via :func:`result_problems`.
+The no-fault path is bitwise-identical either way: the first attempt always
+runs the exact pre-guard computation with the exact pre-guard PRNG key, and
+guards only *read*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Typed failure
+# ---------------------------------------------------------------------------
+
+class PipelineError(RuntimeError):
+    """Structured stage failure: which stage, which recovery ladder was
+    exhausted, and what the operator should change.
+
+    Raised only when recovery is impossible or the ladder ran out — a
+    recovered fault shows up as :class:`StageReport.escalations` instead.
+    """
+
+    def __init__(self, stage: str, detail: str, *,
+                 ladder: Tuple[str, ...] = (), remedy: str = ""):
+        self.stage = stage
+        self.ladder = tuple(ladder)
+        self.remedy = remedy
+        self.detail = detail
+        msg = f"[{stage}] {detail}"
+        if self.ladder:
+            msg += f" (ladder exhausted: {' -> '.join(self.ladder)})"
+        if remedy:
+            msg += f"; remedy: {remedy}"
+        super().__init__(msg)
+
+
+# ---------------------------------------------------------------------------
+# Escalation budget
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Fail-soft knobs for the stage DAG's escalation controllers.
+
+    enabled       master switch; ``False`` restores the pre-guard pipeline
+                  byte-for-byte (the no-fault path is bitwise-identical even
+                  when enabled — this exists for the overhead gate and for
+                  callers that do their own enforcement).
+    max_attempts  total embed/cluster tries per stage (first attempt
+                  included) before the ladder is declared exhausted.
+    basis_widen   Lanczos rung: multiplier on the Krylov basis m per retry
+                  (restart budget doubles alongside; see
+                  :func:`repro.core.lanczos.escalate_basis`).
+    margin_widen  Chebyshev rung: multiplier on the spectral-interval margin
+                  when the bounds-containment check fails, before falling
+                  back to ``solver="lanczos"``.
+    """
+
+    enabled: bool = True
+    max_attempts: int = 3
+    basis_widen: float = 1.5
+    margin_widen: float = 10.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"HealthConfig.max_attempts must be >= 1, got {self.max_attempts}")
+        if self.basis_widen <= 1.0:
+            raise ValueError(
+                f"HealthConfig.basis_widen must be > 1 (each rung must widen "
+                f"the basis), got {self.basis_widen}")
+        if self.margin_widen <= 1.0:
+            raise ValueError(
+                f"HealthConfig.margin_widen must be > 1, got {self.margin_widen}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Stage report (pytree: crosses jit boundaries)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageReport:
+    """Per-stage health record threaded through the pipeline state.
+
+    ``stage`` and ``escalations`` (the ladder rungs actually taken, plus
+    informational notes like ``isolated_vertices[3]``) are static pytree
+    metadata; the numeric diagnostics are children, so they may be traced —
+    a jitted ``run`` returns reports whose fields are concrete after
+    execution.  ``wall_s`` is host wall time and reads ``-1.0`` when the
+    stage ran under a trace (there is no meaningful per-stage wall inside
+    one compiled program).
+    """
+
+    stage: str
+    escalations: Tuple[str, ...] = ()
+    attempts: Any = 1  # stage executions (1 = no escalation)
+    converged: Any = True  # stage-specific: solver converged / clusters live
+    residual_max: Any = 0.0  # embed: max eigpair residual; cluster: inertia
+    wall_s: Any = -1.0  # host wall seconds; -1.0 under a jit trace
+
+    def to_dict(self) -> dict:
+        """JSON-safe form (needs concrete diagnostics — call outside jit)."""
+        return {
+            "stage": self.stage,
+            "escalations": list(self.escalations),
+            "attempts": int(self.attempts),
+            "converged": bool(self.converged),
+            "residual_max": float(self.residual_max),
+            "wall_s": float(self.wall_s),
+        }
+
+
+jax.tree_util.register_dataclass(
+    StageReport,
+    ["attempts", "converged", "residual_max", "wall_s"],
+    ["stage", "escalations"],
+)
+
+
+def reports_to_dict(reports: Tuple[StageReport, ...]) -> list:
+    """Serialize a report trail (the serve loop's structured log record)."""
+    return [r.to_dict() for r in reports]
+
+
+# ---------------------------------------------------------------------------
+# Concreteness + jit-safe signals
+# ---------------------------------------------------------------------------
+
+def is_concrete(*values) -> bool:
+    """True iff none of the values is a jax tracer — the gate for host-driven
+    escalation (a traced health signal cannot steer a Python retry loop)."""
+    return not any(isinstance(v, jax.core.Tracer) for v in values)
+
+
+def nonfinite_count(x: Array) -> Array:
+    """Number of NaN/Inf entries — jit-safe scalar (0 = healthy)."""
+    return (~jnp.isfinite(jnp.asarray(x, jnp.float32))).sum()
+
+
+def graph_signals(val: Array, deg: Optional[Array] = None) -> dict:
+    """Jit-safe degeneracy signals of a similarity graph: nonfinite weights,
+    negative weights (sym-normalization takes ``sqrt(deg)``: a negative
+    degree is a NaN factory), zero-degree (isolated) vertices."""
+    sig = {
+        "nonfinite_weights": nonfinite_count(val),
+        "negative_weights": (jnp.asarray(val) < 0).sum(),
+    }
+    if deg is not None:
+        sig["zero_degree"] = (jnp.asarray(deg) <= 0).sum()
+    return sig
+
+
+def embedding_signals(h: Array, residuals: Array) -> dict:
+    """Jit-safe Stage-2 output signals."""
+    return {
+        "nonfinite_embedding": nonfinite_count(h),
+        "residual_max": jnp.max(jnp.asarray(residuals, jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Eager guards (raise PipelineError on concrete inputs; no-op under a trace)
+# ---------------------------------------------------------------------------
+
+def check_points(x: Array, n_clusters: int) -> None:
+    """Stage-1 input guard: finite features and ``k <= #distinct points``
+    (k-means over fewer distinct rows than clusters cannot produce k live
+    clusters — the duplicate-only degeneracy).  Eager-only; under a trace
+    the check defers to the downstream jit-safe signals."""
+    if not is_concrete(x):
+        return
+    xnp = np.asarray(x)
+    bad = int(np.size(xnp) - np.isfinite(xnp).sum())
+    if bad:
+        raise PipelineError(
+            "prepare", f"input points contain {bad} non-finite value(s)",
+            remedy="sanitize the feature matrix (impute or drop rows) before "
+                   "clustering — NaN propagates through kNN distances into "
+                   "every downstream stage")
+    if xnp.shape[0] < n_clusters:
+        raise PipelineError(
+            "prepare", f"n_clusters={n_clusters} exceeds the number of "
+                       f"points n={xnp.shape[0]}",
+            remedy="reduce n_clusters")
+    distinct = np.unique(xnp, axis=0).shape[0]
+    if distinct < n_clusters:
+        raise PipelineError(
+            "prepare", f"n_clusters={n_clusters} exceeds the number of "
+                       f"distinct points ({distinct} of {xnp.shape[0]} rows "
+                       f"are unique)",
+            remedy="deduplicate the input or reduce n_clusters — at most "
+                   "one live cluster per distinct point exists")
+
+
+def check_graph(val: Array) -> None:
+    """Prebuilt-graph input guard: finite, non-negative edge weights.
+    Eager-only (no-op under a trace)."""
+    if not is_concrete(val):
+        return
+    v = np.asarray(val)
+    bad = int(v.size - np.isfinite(v).sum())
+    if bad:
+        raise PipelineError(
+            "prepare", f"similarity graph contains {bad} non-finite "
+                       f"weight(s)",
+            remedy="rebuild or sanitize the graph — non-finite weights "
+                   "poison degrees and the normalized operator")
+    neg = int((v < 0).sum())
+    if neg:
+        raise PipelineError(
+            "prepare", f"similarity graph contains {neg} negative weight(s)",
+            remedy="similarity weights must be non-negative (the sym "
+                   "normalization takes sqrt of degrees); clamp or rebuild "
+                   "the graph")
+
+
+# ---------------------------------------------------------------------------
+# Post-hoc result enforcement (the jitted-path complement of the guards)
+# ---------------------------------------------------------------------------
+
+def result_problems(result) -> Tuple[str, ...]:
+    """Host-side scan of a finished :class:`SpectralResult` for the problems
+    the eager guards would have raised on — the enforcement hook for callers
+    that run the pipeline under jit (where the escalation controllers are
+    structurally inactive).  Returns a tuple of human-readable problem
+    strings; empty means healthy.  The serve loop turns a non-empty tuple
+    into a structured request failure."""
+    problems = []
+    emb = np.asarray(result.embedding)
+    if not np.isfinite(emb).all():
+        problems.append(
+            f"non-finite embedding ({int((~np.isfinite(emb)).sum())} values)")
+    if not np.isfinite(np.asarray(result.kmeans_inertia)).all():
+        problems.append("non-finite k-means inertia")
+    if not np.isfinite(np.asarray(result.eigenvalues)).all():
+        problems.append("non-finite eigenvalues")
+    for rep in getattr(result, "reports", ()) or ():
+        try:
+            conv = bool(rep.converged)
+        except TypeError:  # traced report examined inside jit: skip
+            continue
+        if not conv:
+            problems.append(f"stage {rep.stage!r} reports converged=False "
+                            f"(residual_max={float(rep.residual_max):.3e})")
+    return tuple(problems)

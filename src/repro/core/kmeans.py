@@ -63,6 +63,7 @@ class KMeansConfig:
     iter: str = "fused"  # "fused" (one-pass kmeans_iter) | "two_pass"
     update: str = "matmul"  # two-pass update: "matmul" (MXU) | "segment" (VPU)
     assign: str = "auto"  # two-pass assignment: "auto" | "ref" | "fused"
+    empty: str = "keep"  # dead centroids: "keep" (paper) | "reseed_farthest"
     fixed_iters: Optional[int] = None  # static trip count (dry-run/bench)
     # kernel tile sizes — single source of truth in repro.kernels._util
     block_q: int = KMEANS_BLOCK_Q
@@ -84,6 +85,10 @@ class KMeansConfig:
         if self.assign not in ("auto", "ref", "fused"):
             raise ValueError(f"KMeansConfig.assign must be one of 'auto', "
                              f"'ref', 'fused', got {self.assign!r}")
+        if self.empty not in ("keep", "reseed_farthest"):
+            raise ValueError(f"KMeansConfig.empty must be 'keep' (paper "
+                             f"behavior: dead centroids stay) or "
+                             f"'reseed_farthest', got {self.empty!r}")
         if self.k is not None and self.k < 1:
             raise ValueError(f"KMeansConfig.k must be >= 1, got {self.k}")
 
@@ -174,6 +179,27 @@ def centroids_from_sums(sums: Array, counts: Array, prev: Array) -> Array:
     safe = jnp.maximum(counts, 1.0)[:, None]
     c = sums / safe
     return jnp.where(counts[:, None] > 0, c, prev.astype(jnp.float32)).astype(prev.dtype)
+
+
+def reseed_empty_farthest(c: Array, counts: Array, x: Array,
+                          dmin: Array) -> Array:
+    """Revive dead centroids from the points farthest from their assigned
+    centroid (``KMeansConfig(empty="reseed_farthest")``).
+
+    Jit-safe with static shapes: the ``k`` globally-farthest points are the
+    donor pool (``lax.top_k`` over dmin), the i-th empty cluster takes the
+    i-th donor (rank = cumsum over the empty mask), full clusters keep their
+    mean.  A reseeded centroid captures at least its donor point next
+    iteration, so Lloyd keeps iterating until no cluster is dead — the
+    classic escape from the pinned-forever empty centroid.
+    """
+    k = c.shape[0]
+    empty = counts <= 0
+    _, donor_idx = jax.lax.top_k(dmin, k)  # k farthest points (desc)
+    donors = x.astype(jnp.float32)[donor_idx]  # [k, d]
+    rank = jnp.clip(jnp.cumsum(empty.astype(jnp.int32)) - 1, 0, k - 1)
+    return jnp.where(empty[:, None], donors[rank],
+                     c.astype(jnp.float32)).astype(c.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +306,12 @@ def kmeans(x: Array, cfg: KMeansConfig, key: Array, *, init_centroids: Optional[
         else:  # two_pass: re-stream x for the update
             new_labels, dmin = _assign(x, c, x_norm, cfg)
             new_c = update_centroids(x, new_labels, k, c, how=cfg.update)
+            if cfg.empty == "reseed_farthest":
+                counts = jax.ops.segment_sum(
+                    jnp.ones_like(new_labels, jnp.float32), new_labels,
+                    num_segments=k)
+        if cfg.empty == "reseed_farthest":  # static branch: "keep" is
+            new_c = reseed_empty_farthest(new_c, counts, x, dmin)  # untouched
         changed = (new_labels != labels).sum()
         return new_c, new_labels, dmin, changed
 

@@ -193,6 +193,25 @@ def validate_basis(cfg: LanczosConfig, n: int) -> None:
             f"b={b}) — widen m / EigConfig.basis_m or shrink block_size")
 
 
+def escalate_basis(cfg: LanczosConfig, n: int, *,
+                   widen: float = 1.5) -> LanczosConfig:
+    """The next rung of the non-convergence ladder: widen the Krylov basis
+    (ARPACK's classic remedy for ``info=1`` — a larger ncv keeps more Ritz
+    pairs per restart cycle) and double the restart budget.
+
+    The widened m is clamped to the ``n - b`` validity bound enforced by
+    :func:`validate_basis`, so the escalated config always constructs; when
+    the clamp leaves m unchanged the extra restarts still make the retry
+    strictly stronger.
+    """
+    if widen <= 1.0:
+        raise ValueError(f"escalate_basis widen must be > 1, got {widen}")
+    b = max(1, cfg.block_size)
+    m = min(int(cfg.m * widen) + 1, n - b)
+    return dataclasses.replace(
+        cfg, m=max(m, cfg.m), max_restarts=max(1, cfg.max_restarts) * 2)
+
+
 def _orthonormal_against(v: Array, basis: Array, key: Array) -> Array:
     """Random unit vector orthogonal to the (zero-padded) basis rows —
     invariant-subspace escape hatch (ARPACK does the same on breakdown)."""

@@ -40,15 +40,18 @@ matvec/matmat closures anywhere in the stage graph.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.core.health as health
 import repro.core.kmeans as km
 import repro.core.lanczos as lz
 import repro.core.laplacian as lap
+from repro.core.health import HealthConfig, PipelineError, StageReport
 from repro.compat import needs_argsort_gather_workaround
 from repro.core.operator import CooOperator, LinearOperator, ShardedCooOperator
 from repro.core.reduce import (
@@ -91,6 +94,7 @@ class SpectralResult(NamedTuple):
     kmeans_inertia: Array
     lanczos_restarts: Array
     kmeans_iterations: Array
+    reports: Tuple[StageReport, ...] = ()  # per-stage health trail (run())
 
 
 def default_basis_size(n: int, k: int, b: int = 1) -> int:
@@ -211,7 +215,9 @@ class EigConfig:
     cheb_degree: int = 64  # Chebyshev filter degree (transition sharpness)
     n_signals: Optional[int] = None  # chebyshev sketch width R; None → k + 8
     lambda_cut: Optional[float] = None  # passband edge; None → bisection
+    cheb_margin: float = 0.01  # spectral-interval safety margin (bounds est.)
     representation: str = "coo"  # single-device operator: "coo" | "blockell"
+    strict: bool = False  # raise PipelineError on unconverged embed (CI/bench)
 
     def __post_init__(self):
         if self.block_size < 1:
@@ -230,6 +236,10 @@ class EigConfig:
             raise ValueError(
                 f"EigConfig.n_signals must be >= 1 (or None for the k + 8 "
                 f"default), got {self.n_signals}")
+        if self.cheb_margin <= 0:
+            raise ValueError(
+                f"EigConfig.cheb_margin must be > 0 (the bounds estimator "
+                f"needs a containment margin), got {self.cheb_margin}")
         if self.representation not in _REPRESENTATIONS:
             raise ValueError(
                 f"EigConfig.representation must be one of {_REPRESENTATIONS} "
@@ -326,6 +336,7 @@ class EmbedState(NamedTuple):
     eigenvalues: Array  # [k] Laplacian eigenvalues 1-θ (ascending; ~0 first)
     residuals: Array  # eigensolver residuals (pre drop_first bookkeeping)
     restarts: Array  # [] Lanczos restart count
+    converged: Any = True  # [] solver convergence flag (bool or 0-d array)
 
 
 # ---------------------------------------------------------------------------
@@ -359,6 +370,7 @@ class PipelineState:
     key_cluster: Optional[Array] = None  # Stage-3 PRNG key
     operator_override: Optional[LinearOperator] = None  # embed operator=
     provenance: Tuple[str, ...] = ()  # executed-stage trail (human-readable)
+    reports: Tuple[StageReport, ...] = ()  # per-stage health records
 
 
 # Canonical stage order.  ``stages`` must be a subsequence of this: the
@@ -433,6 +445,7 @@ class SpectralPipeline:
     stages: Tuple[str, ...] = DEFAULT_STAGES  # ordered stage DAG
     sparsify: SparsifyConfig = SparsifyConfig()  # Stage-1.5 edge sampling
     coarsen: CoarsenConfig = CoarsenConfig()  # Stage-1.5 HEM + refine knobs
+    health: HealthConfig = HealthConfig()  # fail-soft guards + escalation
 
     def __post_init__(self):
         if self.n_clusters < 1:
@@ -475,8 +488,9 @@ class SpectralPipeline:
 
     # -- config plumbing ----------------------------------------------------
 
-    def _lanczos_config(self, n: int) -> lz.LanczosConfig:
-        e = self.eig
+    def _lanczos_config(self, n: int,
+                        eig: Optional[EigConfig] = None) -> lz.LanczosConfig:
+        e = eig if eig is not None else self.eig
         k = e.n_eigvecs or self.n_clusters
         b = e.block_size
         m = e.basis_m or default_basis_size(n, k, b)
@@ -490,26 +504,30 @@ class SpectralPipeline:
             block_size=b,
         )
 
-    def _cheb_config(self, n: int):
+    def _cheb_config(self, n: int, eig: Optional[EigConfig] = None):
         from repro.core.chebyshev import ChebConfig
 
-        e = self.eig
+        e = eig if eig is not None else self.eig
         k = (e.n_eigvecs or self.n_clusters) + (1 if e.drop_first else 0)
         return ChebConfig(
             k=k,
             degree=e.cheb_degree,
             n_signals=e.n_signals,
             lambda_cut=e.lambda_cut,
+            margin=e.cheb_margin,
             which="LA",
         )
 
-    def _eig_config(self, n: int):
+    def _eig_config(self, n: int, eig: Optional[EigConfig] = None):
         """The engine config :func:`repro.core.lanczos.eigsh` dispatches on —
         the solver="lanczos" branch is byte-identical to the pre-chebyshev
-        call chain (the bitwise shim tests pin this)."""
-        if self.eig.solver == "chebyshev":
-            return self._cheb_config(n)
-        return self._lanczos_config(n)
+        call chain (the bitwise shim tests pin this).  ``eig`` overrides the
+        pipeline's Stage-2 config: the escalation controller's handle for
+        widened-basis / widened-margin / fallback-solver retries."""
+        e = eig if eig is not None else self.eig
+        if e.solver == "chebyshev":
+            return self._cheb_config(n, e)
+        return self._lanczos_config(n, e)
 
     def operator(self, state: GraphState) -> LinearOperator:
         """The Stage-2 operator for this graph under this plan — the single
@@ -521,10 +539,18 @@ class SpectralPipeline:
         trace it falls back to the COO operator with a warning (build the
         state eagerly, or pass ``operator=`` into :meth:`embed`).
         """
+        return self._operator_with_notes(state)[0]
+
+    def _operator_with_notes(
+            self, state: GraphState) -> Tuple[LinearOperator, Tuple[str, ...]]:
+        """:meth:`operator` plus the representation-fallback trail — the
+        BlockELL→COO degradation under a jit trace is a rung of the same
+        recovery ladder the escalation controllers report, so the stage
+        report records it instead of only a warning."""
         if isinstance(state.adj, ShardedCOO):
             return ShardedCooOperator(
                 state.adj, variant=self.plan.variant, mesh=self.plan.mesh,
-                axis=self.plan.axis, gather_dtype=self.plan.gather_dtype)
+                axis=self.plan.axis, gather_dtype=self.plan.gather_dtype), ()
         if self.eig.representation == "blockell":
             from repro.core.operator import BlockEllOperator
             from repro.sparse.formats import coo_to_csr, csr_to_blockell
@@ -533,7 +559,8 @@ class SpectralPipeline:
                 # host-side conversion: raises on traced arrays — including
                 # closure-constant states, whose indptr gets staged by the
                 # device_put inside coo_to_csr
-                return BlockEllOperator(csr_to_blockell(coo_to_csr(state.adj)))
+                return BlockEllOperator(
+                    csr_to_blockell(coo_to_csr(state.adj))), ()
             except jax.errors.TracerArrayConversionError:
                 import warnings
 
@@ -544,7 +571,8 @@ class SpectralPipeline:
                     "the operator eagerly (pipe.operator(state)) and pass "
                     "operator= to embed()",
                     RuntimeWarning, stacklevel=3)
-        return CooOperator(state.adj)
+                return CooOperator(state.adj), ("blockell_to_coo_fallback",)
+        return CooOperator(state.adj), ()
 
     # -- Stage 1 ------------------------------------------------------------
 
@@ -625,45 +653,52 @@ class SpectralPipeline:
     # -- Stage 2 ------------------------------------------------------------
 
     def embed(self, state: GraphState, key: Array, *,
-              operator: Optional[LinearOperator] = None) -> EmbedState:
+              operator: Optional[LinearOperator] = None,
+              eig: Optional[EigConfig] = None) -> EmbedState:
         """Stage 2: the spectral embedding of the normalized adjacency — the
         top-k eigenpairs via thick-restart Lanczos (``eig.solver="lanczos"``)
         or the Chebyshev polynomial-filter sketch (``"chebyshev"``), mapped
         to the Ng-Jordan-Weiss rows.  ``operator`` overrides the plan-chosen
         operator (any :class:`LinearOperator` — e.g. a
-        :class:`~repro.core.operator.BlockEllOperator`)."""
+        :class:`~repro.core.operator.BlockEllOperator`); ``eig`` overrides
+        the Stage-2 config (the escalation controller's retry handle)."""
         n = state.adj.shape[0]
         op = self.operator(state) if operator is None else operator
-        scfg = self._eig_config(n)
+        scfg = self._eig_config(n, eig)
         # deterministic, informative start: D^{1/2}·1 is exactly the trivial
         # eigenvector of A_sym — Lanczos deflates it in one step (the
         # chebyshev path seeds its sketch with it for the same reason).
         v0 = jnp.sqrt(jnp.maximum(state.deg.astype(jnp.float32), 0.0)) + 1e-3
-        eig = lz.eigsh(op, scfg, v0=v0, key=key)
-        vecs = eig.eigenvectors
-        vals = eig.eigenvalues
-        if self.eig.drop_first:
+        ecfg = eig if eig is not None else self.eig
+        res = lz.eigsh(op, scfg, v0=v0, key=key)
+        vecs = res.eigenvectors
+        vals = res.eigenvalues
+        if ecfg.drop_first:
             vecs = vecs[:, 1:]
             vals = vals[1:]
         h = lap.embed_rows(vecs, state.inv_sqrt_deg)
         return EmbedState(
             embedding=h,
             eigenvalues=lap.smallest_laplacian_eigs_from_adj(vals),
-            residuals=eig.residuals,
-            restarts=eig.restarts,
+            residuals=res.residuals,
+            restarts=res.restarts,
+            converged=res.converged,
         )
 
     # -- Stage 3 ------------------------------------------------------------
 
     def cluster(self, state: EmbedState, key: Array, *,
-                n_clusters: Optional[int] = None) -> SpectralResult:
+                n_clusters: Optional[int] = None,
+                kmeans: Optional[KMeansConfig] = None) -> SpectralResult:
         """Stage 3: k-means over a (possibly cached) spectral embedding.
 
         ``n_clusters`` overrides the pipeline's k — re-clustering a cached
         embedding at a different granularity without re-entering the
-        eigensolver (the serving scenario).
+        eigensolver (the serving scenario).  ``kmeans`` overrides the Stage-3
+        config (the escalation controller's empty-cluster reseed retry).
         """
-        kcfg = self.kmeans.resolved(n_clusters or self.n_clusters)
+        base = kmeans if kmeans is not None else self.kmeans
+        kcfg = base.resolved(n_clusters or self.n_clusters)
         res = self._run_kmeans(state.embedding, kcfg, key)
         return SpectralResult(
             labels=res.labels,
@@ -675,28 +710,44 @@ class SpectralPipeline:
             kmeans_iterations=res.iterations,
         )
 
+    def _kmeans_sharded_dispatch(self, n: int, kcfg: KMeansConfig) -> bool:
+        """True iff Stage 3 routes to the shard_map ``kmeans_sharded`` loop —
+        the escalation controller consults this too: the packed one-psum
+        accumulator has no global farthest-point view, so the reseed rung is
+        unavailable there (and ``kmeans_sharded`` rejects it)."""
+        plan = self.plan
+        if not (plan.device == "sharded" and plan.variant == "shard_map"
+                and kcfg.iter == "fused" and plan.mesh is not None):
+            return False
+        import math as _math
+
+        axes = (plan.axis,) if isinstance(plan.axis, str) else tuple(plan.axis)
+        axis_size = _math.prod(plan.mesh.shape[a] for a in axes)
+        return n % axis_size == 0
+
     def _run_kmeans(self, h: Array, kcfg: KMeansConfig, key: Array):
         # Plan dispatch: the shard_map plan gets the explicit one-psum-per-
         # iteration Lloyd loop (fused iteration only — the two-pass modes
         # stay on the GSPMD formulation, as do row counts that don't tile
         # the mesh axis).
-        plan = self.plan
-        if plan.device == "sharded" and plan.variant == "shard_map" \
-                and kcfg.iter == "fused" and plan.mesh is not None:
-            import math as _math
+        if self._kmeans_sharded_dispatch(h.shape[0], kcfg):
+            from repro.core.distributed_pipeline import kmeans_sharded
 
-            axes = (plan.axis,) if isinstance(plan.axis, str) else tuple(plan.axis)
-            axis_size = _math.prod(plan.mesh.shape[a] for a in axes)
-            if h.shape[0] % axis_size == 0:
-                from repro.core.distributed_pipeline import kmeans_sharded
-
-                return kmeans_sharded(h, kcfg, key, mesh=plan.mesh,
-                                      axis=plan.axis)
+            return kmeans_sharded(h, kcfg, key, mesh=self.plan.mesh,
+                                  axis=self.plan.axis)
         return km.kmeans(h, kcfg, key)
 
     # -- the stage DAG ------------------------------------------------------
 
     def _stage_prepare(self, st: PipelineState) -> PipelineState:
+        t0 = time.perf_counter()
+        if self.health.enabled:
+            # eager input guards (no-ops on traced inputs): the degeneracies
+            # that poison every downstream stage are cheapest to name here
+            if st.input_graph is not None:
+                health.check_graph(st.input_graph.val)
+            elif st.points is not None:
+                health.check_points(st.points, self.n_clusters)
         if st.input_graph is not None:
             g = self.prepare(st.input_graph)
         elif st.points is not None:
@@ -705,8 +756,20 @@ class SpectralPipeline:
             raise ValueError(
                 "the prepare stage needs a PipelineState with points= or "
                 "input_graph= set")
+        notes: Tuple[str, ...] = ()
+        eager = health.is_concrete(g.deg)
+        if self.health.enabled and eager:
+            # isolated vertices are handled (inv_sqrt_deg pins them to 0, so
+            # they ride along as their own embedding rows) — note, not fault
+            iso = int((np.asarray(g.deg) <= 0).sum())
+            if iso:
+                notes += (f"isolated_vertices[{iso}]",)
+        rep = StageReport(
+            "prepare", escalations=notes,
+            wall_s=time.perf_counter() - t0 if eager else -1.0)
         return dataclasses.replace(
-            st, graph=g, provenance=st.provenance + ("prepare",))
+            st, graph=g, reports=st.reports + (rep,),
+            provenance=st.provenance + ("prepare",))
 
     def _stage_sparsify(self, st: PipelineState) -> PipelineState:
         from repro.core import reduce as red
@@ -753,15 +816,116 @@ class SpectralPipeline:
             provenance=st.provenance
             + (f"coarsen[n {info.n_before}→{info.n_after}]",))
 
+    def _embed_failure(self, emb: EmbedState,
+                       ecfg: EigConfig) -> Optional[str]:
+        """Classify a *concrete* Stage-2 output: ``None`` (healthy),
+        ``"cheb_diverged"`` (polynomial filter left the bounds interval —
+        Tremblay-style garbage subspace), ``"nonfinite"`` (NaN/Inf leaked
+        into the embedding), or ``"unconverged"`` (residuals above tol)."""
+        bad = int(health.nonfinite_count(emb.embedding)) \
+            + int(health.nonfinite_count(emb.eigenvalues))
+        if ecfg.solver == "chebyshev":
+            from repro.core import chebyshev as cheb
+
+            if bad or cheb.diverged(emb.eigenvalues):
+                return "cheb_diverged"
+        if bad:
+            return "nonfinite"
+        if not bool(np.asarray(emb.converged).all()):
+            return "unconverged"
+        return None
+
+    def _escalate_embed(self, ecfg: EigConfig, failure: str,
+                        n: int) -> Tuple[Optional[EigConfig], str]:
+        """The next rung of the Stage-2 recovery ladder for this failure
+        class, or ``(None, "")`` when no rung applies.
+
+        chebyshev: a containment miss first widens the bounds margin
+        (``HealthConfig.margin_widen``× — the filter diverges geometrically
+        when an eigenvalue escapes the mapped interval, so a wider interval
+        is the cheap fix), then falls back to the exact Lanczos solver.
+        lanczos: ARPACK's remedy — widen the Krylov basis and double the
+        restart budget (:func:`repro.core.lanczos.escalate_basis`).
+        """
+        hc = self.health
+        if ecfg.solver == "chebyshev":
+            if ecfg.cheb_margin < self.eig.cheb_margin * hc.margin_widen:
+                new = dataclasses.replace(
+                    ecfg, cheb_margin=ecfg.cheb_margin * hc.margin_widen)
+                return new, f"cheb_margin_widen[{new.cheb_margin:g}]"
+            return dataclasses.replace(ecfg, solver="lanczos"), \
+                "fallback_lanczos"
+        if failure in ("unconverged", "nonfinite"):
+            lcfg = self._lanczos_config(n, ecfg)
+            wid = lz.escalate_basis(lcfg, n, widen=hc.basis_widen)
+            new = dataclasses.replace(
+                ecfg, basis_m=wid.m, max_restarts=wid.max_restarts)
+            return new, f"lanczos_widen[m={wid.m},restarts={wid.max_restarts}]"
+        return None, ""
+
     def _stage_embed(self, st: PipelineState) -> PipelineState:
         if st.graph is None:
             raise ValueError("embed runs after prepare (no graph in state)")
         if st.key_embed is None:
             raise ValueError("embed needs PipelineState.key_embed")
-        emb = self.embed(st.graph, st.key_embed,
-                         operator=st.operator_override)
+        hc = self.health
+        t0 = time.perf_counter()
+        if st.operator_override is not None:
+            op, notes = st.operator_override, ()
+        else:
+            op, notes = self._operator_with_notes(st.graph)
+        # first attempt: the exact pre-guard computation with the exact
+        # pre-guard key — the no-fault path stays bitwise-identical
+        ecfg = self.eig
+        emb = self.embed(st.graph, st.key_embed, operator=op, eig=ecfg)
+        attempts = 1
+        rungs = list(notes)
+        failure = None
+        if hc.enabled and health.is_concrete(
+                emb.embedding, emb.eigenvalues, emb.converged):
+            # host-driven escalation: only possible on concrete outputs (a
+            # widened basis changes static shapes; a traced converged flag
+            # cannot steer this loop).  Jitted callers enforce post-hoc via
+            # health.result_problems.
+            failure = self._embed_failure(emb, ecfg)
+            while failure and attempts < hc.max_attempts:
+                ecfg, rung = self._escalate_embed(
+                    ecfg, failure, st.graph.adj.shape[0])
+                if ecfg is None:
+                    break
+                rungs.append(rung)
+                key = jax.random.fold_in(st.key_embed, attempts)
+                emb = self.embed(st.graph, key, operator=op, eig=ecfg)
+                attempts += 1
+                failure = self._embed_failure(emb, ecfg)
+            if failure in ("nonfinite", "cheb_diverged"):
+                raise PipelineError(
+                    "embed",
+                    f"spectral embedding is {failure.replace('_', ' ')} "
+                    f"after {attempts} attempt(s)",
+                    ladder=tuple(rungs),
+                    remedy="check the similarity graph / operator for "
+                           "degenerate values (health.check_graph), or raise "
+                           "HealthConfig.max_attempts")
+            if failure == "unconverged" and self.eig.strict:
+                raise PipelineError(
+                    "embed",
+                    f"eigensolver unconverged after {attempts} attempt(s) "
+                    f"(residual_max="
+                    f"{float(np.max(np.asarray(emb.residuals))):.3e}, "
+                    f"tol={self.eig.tol:g}) and EigConfig.strict is set",
+                    ladder=tuple(rungs),
+                    remedy="raise max_restarts/basis_m, loosen tol, or drop "
+                           "strict to accept the degraded subspace")
+        eager = health.is_concrete(emb.embedding)
+        rep = StageReport(
+            "embed", escalations=tuple(rungs), attempts=attempts,
+            converged=jnp.asarray(emb.converged).all(),
+            residual_max=jnp.max(jnp.asarray(emb.residuals, jnp.float32)),
+            wall_s=time.perf_counter() - t0 if eager else -1.0)
         return dataclasses.replace(
-            st, embedding=emb, provenance=st.provenance + ("embed",))
+            st, embedding=emb, reports=st.reports + (rep,),
+            provenance=st.provenance + ("embed",))
 
     def _stage_refine(self, st: PipelineState) -> PipelineState:
         from repro.core import reduce as red
@@ -785,6 +949,7 @@ class SpectralPipeline:
             eigenvalues=lap.smallest_laplacian_eigs_from_adj(theta),
             residuals=resid,
             restarts=st.embedding.restarts,
+            converged=st.embedding.converged,
         )
         return dataclasses.replace(
             st, graph=fine, embedding=emb, reduction=None,
@@ -795,9 +960,58 @@ class SpectralPipeline:
             raise ValueError("cluster runs after embed (no embedding in state)")
         if st.key_cluster is None:
             raise ValueError("cluster needs PipelineState.key_cluster")
+        hc = self.health
+        t0 = time.perf_counter()
+        kcfg = self.kmeans.resolved(self.n_clusters)
         res = self.cluster(st.embedding, st.key_cluster)
+        attempts = 1
+        rungs: list = []
+        eager = health.is_concrete(
+            res.labels, res.kmeans_inertia, st.embedding.embedding)
+        if hc.enabled and eager:
+            if int(health.nonfinite_count(st.embedding.embedding)):
+                raise PipelineError(
+                    "cluster", "input embedding contains non-finite values",
+                    remedy="run the embed stage with health enabled (its "
+                           "ladder catches this) or sanitize the cached "
+                           "embedding before re-clustering")
+            empty = kcfg.k - int(np.unique(np.asarray(res.labels)).size)
+            bad = not np.isfinite(np.asarray(res.kmeans_inertia)).all()
+            # one reseed rung: dead centroids revive from the farthest
+            # points.  Unavailable when the config already reseeds or when
+            # Stage 3 routes to the packed shard_map accumulator (no global
+            # farthest-point view there — kmeans_sharded rejects it).
+            can_reseed = (kcfg.empty == "keep"
+                          and not self._kmeans_sharded_dispatch(
+                              st.embedding.embedding.shape[0], kcfg))
+            if (empty > 0 or bad) and attempts < hc.max_attempts \
+                    and can_reseed:
+                rungs.append(f"kmeans_reseed_farthest[empty={empty}]")
+                retry = dataclasses.replace(
+                    self.kmeans, empty="reseed_farthest")
+                key = jax.random.fold_in(st.key_cluster, attempts)
+                res = self.cluster(st.embedding, key, kmeans=retry)
+                attempts += 1
+                bad = not np.isfinite(np.asarray(res.kmeans_inertia)).all()
+            if bad:
+                raise PipelineError(
+                    "cluster", "k-means inertia is non-finite",
+                    ladder=tuple(rungs),
+                    remedy="inspect the embedding scale — k-means over a "
+                           "finite embedding cannot produce non-finite "
+                           "inertia")
+        # jit-safe liveness: all k clusters occupied (works traced or eager)
+        counts = jnp.zeros((kcfg.k,), jnp.int32).at[res.labels].add(1)
+        rep = StageReport(
+            "cluster", escalations=tuple(rungs), attempts=attempts,
+            converged=(counts > 0).sum() == kcfg.k,
+            residual_max=jnp.asarray(res.kmeans_inertia, jnp.float32),
+            wall_s=time.perf_counter() - t0 if eager else -1.0)
+        reports = st.reports + (rep,)
+        res = res._replace(reports=reports)
         return dataclasses.replace(
-            st, result=res, provenance=st.provenance + ("cluster",))
+            st, result=res, reports=reports,
+            provenance=st.provenance + ("cluster",))
 
     def run_stages(self, state: PipelineState) -> PipelineState:
         """Execute the configured stage DAG over a :class:`PipelineState` —
@@ -859,6 +1073,7 @@ class SpectralPipeline:
             "stages": list(self.stages),
             "sparsify": self.sparsify.to_dict(),
             "coarsen": self.coarsen.to_dict(),
+            "health": self.health.to_dict(),
         }
 
     @classmethod
@@ -873,4 +1088,5 @@ class SpectralPipeline:
             stages=tuple(d.get("stages", DEFAULT_STAGES)),
             sparsify=SparsifyConfig(**d.get("sparsify", {})),
             coarsen=CoarsenConfig(**d.get("coarsen", {})),
+            health=HealthConfig(**d.get("health", {})),
         )

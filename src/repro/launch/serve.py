@@ -18,41 +18,117 @@ import jax.numpy as jnp
 from repro.configs import ARCHS
 
 
-def serve_cluster(args):
-    from repro.core.spectral import SpectralPipeline
+def serve_cluster(args) -> int:
+    """Request loop with per-request fault isolation.
+
+    One failing request logs a structured JSON error line and the loop
+    continues; the return value is the failure count (the process exit
+    code).  Three enforcement layers per request:
+
+    * in-flight: the pipeline's own guards/ladders — live when running
+      eagerly (``--strict``, where the escalation controllers are
+      host-driven and ``EigConfig(strict=True)`` raises on unconverged
+      embeds); under jit (the default) they degrade to signals-only;
+    * post-hoc: :func:`repro.core.health.result_problems` on the concrete
+      outputs — the jitted path's complement (non-finite outputs or
+      ``converged=False`` stage reports fail the request);
+    * ``--deadline-s``: a wall-clock budget; a slower request is a failure
+      (jit dispatch is blocking, so the deadline is checked post-hoc, not
+      preemptively).
+
+    ``--inject-fault nan-graph`` poisons every odd request's edge weights —
+    the CI smoke proof that a poisoned request fails *structurally* while
+    its neighbors keep serving.
+    """
+    import json
+    import math
+    import sys
+
+    from repro.core import health
+
+    def _json_safe(o):
+        # strict-JSON logs: a NaN residual in a stage report must not
+        # produce a line downstream parsers reject
+        if isinstance(o, float) and not math.isfinite(o):
+            return str(o)
+        if isinstance(o, dict):
+            return {k: _json_safe(v) for k, v in o.items()}
+        if isinstance(o, (list, tuple)):
+            return [_json_safe(v) for v in o]
+        return o
+    from repro.core.health import PipelineError
+    from repro.core.spectral import EigConfig, SpectralPipeline
     from repro.data.sbm import sbm_graph
 
-    pipe = SpectralPipeline(n_clusters=args.clusters)
+    pipe = SpectralPipeline(n_clusters=args.clusters,
+                            eig=EigConfig(strict=args.strict))
     print(f"[config] {pipe.to_dict()}")  # the reproducibility record
-    fn = jax.jit(lambda w, key: pipe.run(w, key))
-    prepare = jax.jit(pipe.prepare)
-    embed = jax.jit(pipe.embed)
+    jit = (lambda f: f) if args.strict else jax.jit
+    fn = jit(lambda w, key: pipe.run(w, key))
+    prepare = jit(pipe.prepare)
+    embed = jit(pipe.embed)
     recluster = {
-        k2: jax.jit(lambda e, key, k2=k2: pipe.cluster(e, key, n_clusters=k2))
+        k2: jit(lambda e, key, k2=k2: pipe.cluster(e, key, n_clusters=k2))
         for k2 in (args.recluster_k or [])
     }
+    failures = 0
+
+    def fail(req, stage, error, **extra):
+        nonlocal failures
+        failures += 1
+        print(json.dumps(_json_safe({"event": "request_error", "req": req,
+                                     "stage": stage, "error": error,
+                                     **extra})),
+              file=sys.stderr, flush=True)
+
     for req in range(args.requests):
         coo, _ = sbm_graph(args.n // args.clusters, args.clusters, 0.2, 0.01, seed=req)
+        if args.inject_fault == "nan-graph" and req % 2 == 1:
+            from repro.testing.faults import poison_graph
+
+            coo = poison_graph(coo)
         t0 = time.perf_counter()
-        out = fn(coo, jax.random.PRNGKey(req))
-        jax.block_until_ready(out.labels)
-        print(f"[req {req}] n={coo.shape[0]} k={args.clusters} "
-              f"latency={time.perf_counter()-t0:.3f}s "
-              f"restarts={int(out.lanczos_restarts)}")
-        if recluster:
-            # the stage-graph serving shape: embed once, serve many k —
-            # Stage 3 reruns on the cached embedding, Lanczos does not
-            t0 = time.perf_counter()
-            emb = embed(prepare(coo), jax.random.PRNGKey(req))
-            jax.block_until_ready(emb.embedding)
-            t_embed = time.perf_counter() - t0
-            for k2, fn2 in recluster.items():
+        try:
+            out = fn(coo, jax.random.PRNGKey(req))
+            jax.block_until_ready(out.labels)
+            latency = time.perf_counter() - t0
+            problems = health.result_problems(out)
+            if problems:
+                fail(req, "post_hoc", "; ".join(problems),
+                     reports=health.reports_to_dict(out.reports))
+                continue
+            if args.deadline_s is not None and latency > args.deadline_s:
+                fail(req, "deadline", f"latency {latency:.3f}s exceeds "
+                                      f"--deadline-s {args.deadline_s}",
+                     latency_s=latency)
+                continue
+            print(f"[req {req}] n={coo.shape[0]} k={args.clusters} "
+                  f"latency={latency:.3f}s "
+                  f"restarts={int(out.lanczos_restarts)} "
+                  f"reports="
+                  f"{json.dumps(_json_safe(health.reports_to_dict(out.reports)))}")
+            if recluster:
+                # the stage-graph serving shape: embed once, serve many k —
+                # Stage 3 reruns on the cached embedding, Lanczos does not
                 t0 = time.perf_counter()
-                out2 = fn2(emb, jax.random.PRNGKey(1000 + req))
-                jax.block_until_ready(out2.labels)
-                print(f"[req {req}]   re-cluster k={k2}: "
-                      f"{time.perf_counter()-t0:.3f}s on the cached embedding "
-                      f"(embed once: {t_embed:.3f}s)")
+                emb = embed(prepare(coo), jax.random.PRNGKey(req))
+                jax.block_until_ready(emb.embedding)
+                t_embed = time.perf_counter() - t0
+                for k2, fn2 in recluster.items():
+                    t0 = time.perf_counter()
+                    out2 = fn2(emb, jax.random.PRNGKey(1000 + req))
+                    jax.block_until_ready(out2.labels)
+                    print(f"[req {req}]   re-cluster k={k2}: "
+                          f"{time.perf_counter()-t0:.3f}s on the cached "
+                          f"embedding (embed once: {t_embed:.3f}s)")
+        except PipelineError as e:
+            fail(req, e.stage, e.detail, ladder=list(e.ladder),
+                 remedy=e.remedy)
+        except Exception as e:  # isolation: a request must not kill the loop
+            fail(req, "unknown", repr(e))
+    print(json.dumps({"event": "serve_summary", "requests": args.requests,
+                      "failures": failures}), flush=True)
+    return failures
 
 
 def serve_decode(args):
@@ -90,6 +166,16 @@ def main(argv=None):
     ap.add_argument("--recluster-k", type=int, nargs="*", default=None,
                     help="extra cluster counts served from the cached "
                          "embedding (Stage 3 only, no second eigensolve)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall budget; slower requests count as "
+                         "failures (cluster mode)")
+    ap.add_argument("--strict", action="store_true",
+                    help="cluster mode: run eagerly with EigConfig(strict=True)"
+                         " — live escalation ladders, unconverged embeds raise")
+    ap.add_argument("--inject-fault", choices=["none", "nan-graph"],
+                    default="none",
+                    help="poison every odd request's graph (fault-isolation "
+                         "smoke: the loop must survive, exit code counts them)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
@@ -97,7 +183,11 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if args.mode == "cluster":
-        serve_cluster(args)
+        import sys
+
+        # exit code = failure count (clamped below the shell's reserved
+        # range) so orchestrators see partial failure without log parsing
+        sys.exit(min(serve_cluster(args), 125))
     else:
         serve_decode(args)
 

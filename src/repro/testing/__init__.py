@@ -1,0 +1,5 @@
+"""Test-support package: fault injection for the fail-soft pipeline.
+
+Import cost matters (this package ships inside ``repro``): keep this
+namespace lazy — pull :mod:`repro.testing.faults` explicitly.
+"""

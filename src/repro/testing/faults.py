@@ -1,0 +1,204 @@
+"""Fault injection: exercise every rung of the recovery ladders from tests.
+
+The fail-soft layer (:mod:`repro.core.health`, the escalation controllers in
+:class:`~repro.core.spectral.SpectralPipeline`) is only trustworthy if every
+fault class it claims to handle is actually injected somewhere — production
+must never be the first place a ladder rung runs.  This module fabricates
+the failure surface on demand:
+
+* **operator faults** — :class:`NaNOperator` (NaN streams out of every
+  mv/mm: the poisoned-graph / poisoned-kernel class),
+  :class:`BoundsLiarOperator` (the Chebyshev bounds-containment miss:
+  the power-iteration estimator sees a tame spectrum via ``mv`` while the
+  filter recurrence streams a ``scale``×-larger one via ``mm`` — the
+  |t| > 1 geometric-divergence regime the margin-widen/fallback rungs
+  exist for), :class:`CountingOperator` (attempt accounting);
+* **solver faults** — :func:`forced_nonconvergence`, a context manager that
+  wraps :func:`repro.core.lanczos.eigsh` at the module attribute the
+  pipeline dispatches through, forcing ``converged=False`` + above-tol
+  residuals for its first ``recover_after`` calls (``None``: forever);
+* **stage faults** — :func:`wrap_stage` grafts a state transform onto any
+  ``_stage_<name>`` of a pipeline instance (poison an embedding *between*
+  embed and cluster, drop a graph's weights, etc.);
+* **input corruptors** — :func:`poison_points` / :func:`poison_graph` for
+  the eager guard surface (NaN features, negative/NaN weights).
+
+Everything here is eager-path tooling: the escalation controllers are
+host-driven, so faults are injected on concrete values.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import COO
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Operator faults
+# ---------------------------------------------------------------------------
+
+class NaNOperator:
+    """A LinearOperator whose every application emits NaN — the stand-in for
+    a poisoned graph or a miscompiled kernel feeding the eigensolver."""
+
+    def __init__(self, op):
+        self._op = op
+        self.shape = op.shape
+
+    def mv(self, x: Array) -> Array:
+        return self._op.mv(x) * jnp.nan
+
+    def mm(self, x: Array) -> Array:
+        return self._op.mm(x) * jnp.nan
+
+
+class BoundsLiarOperator:
+    """Splits the operator's personality to fabricate a Chebyshev
+    bounds-containment miss deterministically.
+
+    ``estimate_spectral_bounds`` runs power iterations through ``mv`` and
+    sees the *true* operator, so the estimated ``[lo, hi]`` is tame; the
+    filter recurrence, KPM moments, and Rayleigh-Ritz stream through ``mm``
+    and see ``scale × A``, whose spectrum sits far outside the mapped
+    [-1, 1] interval — the three-term recurrence then diverges
+    geometrically (the exact failure mode of an under-margined estimator on
+    a hard spectrum).  The Lanczos fallback rung recovers: at block_size=1
+    it iterates through ``mv``, which still tells the truth.
+    """
+
+    def __init__(self, op, scale: float = 4.0):
+        self._op = op
+        self._scale = float(scale)
+        self.shape = op.shape
+
+    def mv(self, x: Array) -> Array:
+        return self._op.mv(x)
+
+    def mm(self, x: Array) -> Array:
+        return self._op.mm(x) * self._scale
+
+
+class CountingOperator:
+    """Pass-through wrapper counting mv/mm applications (attempt
+    accounting: a widened-basis retry must actually re-stream the
+    operator)."""
+
+    def __init__(self, op):
+        self._op = op
+        self.shape = op.shape
+        self.mv_calls = 0
+        self.mm_calls = 0
+
+    def mv(self, x: Array) -> Array:
+        self.mv_calls += 1
+        return self._op.mv(x)
+
+    def mm(self, x: Array) -> Array:
+        self.mm_calls += 1
+        return self._op.mm(x)
+
+
+# ---------------------------------------------------------------------------
+# Solver faults
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def forced_nonconvergence(residual: float = 1.0,
+                          recover_after: Optional[int] = None):
+    """Force ``converged=False`` (+ ``residual`` in every residual slot) out
+    of :func:`repro.core.lanczos.eigsh` for the duration of the block.
+
+    Patches the module attribute the pipeline dispatches through
+    (``lz.eigsh(...)`` is a runtime lookup), so the real solver still runs —
+    only its verdict is falsified.  ``recover_after=n`` lets the n-th call
+    (0-indexed: calls 0..n-1 are poisoned) report the truth again, which is
+    how tests exercise a ladder that *succeeds* mid-climb.  Yields a
+    one-element call-count list for attempt assertions.
+    """
+    import repro.core.lanczos as lz
+
+    orig = lz.eigsh
+    calls = [0]
+
+    def poisoned(op, cfg, **kw):
+        i = calls[0]
+        calls[0] += 1
+        res = orig(op, cfg, **kw)
+        if recover_after is not None and i >= recover_after:
+            return res
+        return res._replace(
+            converged=jnp.asarray(False),
+            residuals=jnp.full_like(res.residuals, residual))
+
+    lz.eigsh = poisoned
+    try:
+        yield calls
+    finally:
+        lz.eigsh = orig
+
+
+# ---------------------------------------------------------------------------
+# Stage faults
+# ---------------------------------------------------------------------------
+
+def wrap_stage(pipe, stage: str, transform: Callable):
+    """A copy of ``pipe`` whose ``_stage_<stage>`` output state passes
+    through ``transform`` — inject a fault *between* two stages of the DAG
+    (e.g. NaN the embedding after embed, before cluster's input guard).
+
+    Built as a throwaway subclass so the stage DAG machinery (``run_stages``
+    getattr dispatch, provenance, reports) is exactly the production path.
+    """
+    cls = type(pipe)
+    name = f"_stage_{stage}"
+    orig = getattr(cls, name)
+
+    def patched(self, st):
+        return transform(orig(self, st))
+
+    sub = type(f"Faulty_{cls.__name__}", (cls,), {name: patched})
+    return sub(**{f.name: getattr(pipe, f.name)
+                  for f in dataclasses.fields(pipe)})
+
+
+def poison_embedding(st):
+    """A :func:`wrap_stage` transform: NaN one entry of the embedding (the
+    cached-embedding-corruption scenario cluster's input guard catches)."""
+    emb = st.embedding
+    h = emb.embedding.at[0, 0].set(jnp.nan)
+    return dataclasses.replace(st, embedding=emb._replace(embedding=h))
+
+
+# ---------------------------------------------------------------------------
+# Input corruptors (the eager guard surface)
+# ---------------------------------------------------------------------------
+
+def poison_points(x, n_bad: int = 3, value: float = np.nan,
+                  seed: int = 0) -> np.ndarray:
+    """Scatter ``n_bad`` poisoned entries into a copy of the feature
+    matrix."""
+    x = np.array(x, dtype=np.float32, copy=True)
+    rng = np.random.RandomState(seed)
+    flat = rng.choice(x.size, size=n_bad, replace=False)
+    x.reshape(-1)[flat] = value
+    return x
+
+def poison_graph(w: COO, n_bad: int = 3, value: float = np.nan,
+                 seed: int = 0) -> COO:
+    """A copy of the similarity graph with ``n_bad`` poisoned edge
+    weights (NaN by default; pass a negative ``value`` for the
+    negative-weight guard)."""
+    val = np.array(w.val, dtype=np.float32, copy=True)
+    rng = np.random.RandomState(seed)
+    idx = rng.choice(val.size, size=min(n_bad, val.size), replace=False)
+    val[idx] = value
+    return COO(row=w.row, col=w.col, val=jnp.asarray(val), shape=w.shape,
+               sorted_rows=w.sorted_rows)

@@ -1,0 +1,392 @@
+"""The fail-soft layer: every fault class from repro.testing.faults either
+recovers via a documented ladder rung or raises a structured PipelineError —
+no path returns non-finite labels silently.
+
+Covers (ISSUE 8 satellite): NaN operator, poisoned-eigsh non-convergence,
+Chebyshev bound violation, duplicate-only point sets, isolated vertices,
+empty-cluster reseed parity, and a sharded-path fault; plus the bitwise
+no-fault contract (health on == health off == pre-PR pipeline) and the
+report/serialization plumbing.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.kmeans as km
+import repro.core.lanczos as lz
+from repro.core import health
+from repro.core.health import HealthConfig, PipelineError, StageReport
+from repro.core.kmeans import KMeansConfig
+from repro.core.spectral import EigConfig, SpectralPipeline
+from repro.data.sbm import sbm_graph
+from repro.sparse.distributed import partition_coo_by_rows
+from repro.sparse.formats import COO
+from repro.testing import faults
+
+
+def _blobs(k=3, n_per=30, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = (rng.permutation(np.eye(k, d)) * 20.0).astype(np.float32)
+    x = np.concatenate([c + rng.normal(size=(n_per, d)) for c in centers])
+    return jnp.asarray(x.astype(np.float32))
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# No-fault contract: guards read, never write
+# ---------------------------------------------------------------------------
+
+def test_health_enabled_is_bitwise_identical_to_disabled():
+    x = _blobs()
+    on = SpectralPipeline(n_clusters=3).run(x, KEY)
+    off = SpectralPipeline(
+        n_clusters=3, health=HealthConfig(enabled=False)).run(x, KEY)
+    np.testing.assert_array_equal(np.asarray(on.labels), np.asarray(off.labels))
+    np.testing.assert_array_equal(np.asarray(on.embedding),
+                                  np.asarray(off.embedding))
+    np.testing.assert_array_equal(np.asarray(on.kmeans_inertia),
+                                  np.asarray(off.kmeans_inertia))
+
+
+def test_healthy_run_reports_one_attempt_per_stage():
+    out = SpectralPipeline(n_clusters=3).run(_blobs(), KEY)
+    assert [r.stage for r in out.reports] == ["prepare", "embed", "cluster"]
+    for r in out.reports:
+        assert int(r.attempts) == 1 and r.escalations == ()
+        assert bool(np.asarray(r.converged))
+        assert float(r.wall_s) >= 0.0  # eager: real wall time
+    assert health.result_problems(out) == ()
+    json.dumps(health.reports_to_dict(out.reports))  # JSON-serializable
+
+
+def test_reports_cross_the_jit_boundary():
+    x = _blobs()
+    pipe = SpectralPipeline(n_clusters=3)
+    out = jax.jit(pipe.run)(x, KEY)
+    [prep, emb, clus] = out.reports
+    assert (prep.stage, emb.stage, clus.stage) == ("prepare", "embed",
+                                                   "cluster")
+    assert float(emb.wall_s) == -1.0  # traced: no per-stage wall
+    assert bool(np.asarray(emb.converged))
+    # jit and eager produce bitwise-identical labels (controllers idle on
+    # the healthy path)
+    eager = pipe.run(x, KEY)
+    np.testing.assert_array_equal(np.asarray(out.labels),
+                                  np.asarray(eager.labels))
+
+
+# ---------------------------------------------------------------------------
+# Operator faults
+# ---------------------------------------------------------------------------
+
+def test_nan_operator_raises_structured_pipeline_error():
+    x = _blobs()
+    pipe = SpectralPipeline(n_clusters=3)
+    op = faults.NaNOperator(pipe.operator(pipe.build_graph(x)))
+    with pytest.raises(PipelineError) as ei:
+        pipe.run(x, KEY, operator=op)
+    e = ei.value
+    assert e.stage == "embed"
+    assert len(e.ladder) == 2  # max_attempts=3 → two escalation rungs
+    assert all("lanczos_widen" in r for r in e.ladder)
+    assert e.remedy  # a PipelineError always names a remedy
+    assert "[embed]" in str(e) and "ladder exhausted" in str(e)
+
+
+def test_forced_nonconvergence_recovers_mid_ladder():
+    x = _blobs()
+    with faults.forced_nonconvergence(recover_after=1) as calls:
+        out = SpectralPipeline(n_clusters=3).run(x, KEY)
+    assert calls[0] == 2  # poisoned attempt + widened retry
+    rep = next(r for r in out.reports if r.stage == "embed")
+    assert int(rep.attempts) == 2
+    assert len(rep.escalations) == 1 and "lanczos_widen" in rep.escalations[0]
+    assert bool(np.asarray(rep.converged))
+    assert np.isfinite(np.asarray(out.labels)).all()
+    assert health.result_problems(out) == ()
+
+
+def test_forced_nonconvergence_exhausted_degrades_with_report():
+    x = _blobs()
+    with faults.forced_nonconvergence() as calls:
+        out = SpectralPipeline(n_clusters=3).run(x, KEY)
+    assert calls[0] == 3  # the full attempt budget
+    rep = next(r for r in out.reports if r.stage == "embed")
+    assert int(rep.attempts) == 3 and not bool(np.asarray(rep.converged))
+    # degraded, not garbage: labels still finite, and the degradation is
+    # visible post-hoc (the serve loop fails such a request)
+    assert np.isfinite(np.asarray(out.labels)).all()
+    assert any("converged=False" in p for p in health.result_problems(out))
+
+
+def test_strict_mode_raises_on_unconverged_embed():
+    x = _blobs()
+    pipe = SpectralPipeline(n_clusters=3, eig=EigConfig(strict=True))
+    with faults.forced_nonconvergence():
+        with pytest.raises(PipelineError) as ei:
+            pipe.run(x, KEY)
+    assert ei.value.stage == "embed"
+    assert "strict" in str(ei.value)
+
+
+def test_embed_state_surfaces_converged_and_residuals():
+    pipe = SpectralPipeline(n_clusters=3)
+    emb = pipe.embed(pipe.build_graph(_blobs()), KEY)
+    assert bool(np.asarray(emb.converged))
+    assert np.asarray(emb.residuals).size >= 3
+
+
+# ---------------------------------------------------------------------------
+# Chebyshev bound violation
+# ---------------------------------------------------------------------------
+
+def test_chebyshev_bound_violation_falls_back_to_lanczos():
+    x = _blobs()
+    pipe = SpectralPipeline(n_clusters=3, eig=EigConfig(solver="chebyshev"))
+    op = faults.BoundsLiarOperator(pipe.operator(pipe.build_graph(x)))
+    out = pipe.run(x, KEY, operator=op)
+    rep = next(r for r in out.reports if r.stage == "embed")
+    assert any("cheb_margin_widen" in r for r in rep.escalations)
+    assert rep.escalations[-1] == "fallback_lanczos"
+    assert bool(np.asarray(rep.converged))
+    assert np.isfinite(np.asarray(out.labels)).all()
+    assert np.isfinite(np.asarray(out.embedding)).all()
+
+
+def test_chebyshev_diverged_detector():
+    from repro.core.chebyshev import diverged
+
+    assert not diverged(np.array([0.0, 0.1, 0.5]))  # Laplacian in [0, 2]
+    assert diverged(np.array([0.0, np.nan]))
+    assert diverged(np.array([0.0, 1e8]))  # far outside [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# Input degeneracies (eager guards)
+# ---------------------------------------------------------------------------
+
+def test_nan_points_raise_at_prepare():
+    x = jnp.asarray(faults.poison_points(_blobs()))
+    with pytest.raises(PipelineError) as ei:
+        SpectralPipeline(n_clusters=3).run(x, KEY)
+    assert ei.value.stage == "prepare" and "non-finite" in ei.value.detail
+
+
+def test_duplicate_only_points_raise_at_prepare():
+    x = jnp.ones((20, 4), jnp.float32)  # one distinct row, k=3
+    with pytest.raises(PipelineError) as ei:
+        SpectralPipeline(n_clusters=3).run(x, KEY)
+    assert ei.value.stage == "prepare" and "distinct" in ei.value.detail
+
+
+def test_k_exceeding_n_raises_at_prepare():
+    x = _blobs(k=2, n_per=2)  # n=4 < k=8
+    with pytest.raises(PipelineError, match="exceeds the number of points"):
+        SpectralPipeline(n_clusters=8).run(x, KEY)
+
+
+def test_poisoned_graph_weights_raise_at_prepare():
+    from repro.core.similarity import build_knn_graph
+
+    w = build_knn_graph(_blobs(), 10)
+    with pytest.raises(PipelineError, match="non-finite"):
+        SpectralPipeline(n_clusters=3).run(faults.poison_graph(w), KEY)
+    with pytest.raises(PipelineError, match="negative"):
+        SpectralPipeline(n_clusters=3).run(
+            faults.poison_graph(w, value=-0.5), KEY)
+
+
+def test_isolated_vertices_noted_and_survived():
+    # two 10-cliques + one vertex with no edges at all (n big enough for
+    # the default Krylov basis)
+    rows, cols = [], []
+    for base in (0, 10):
+        for i in range(10):
+            for j in range(10):
+                if i != j:
+                    rows.append(base + i)
+                    cols.append(base + j)
+    w = COO(row=jnp.asarray(np.array(rows)), col=jnp.asarray(np.array(cols)),
+            val=jnp.ones((len(rows),), jnp.float32), shape=(21, 21),
+            sorted_rows=False)
+    out = SpectralPipeline(n_clusters=2).run(w, KEY)
+    prep = out.reports[0]
+    assert "isolated_vertices[1]" in prep.escalations
+    assert np.isfinite(np.asarray(out.labels)).all()
+    assert np.isfinite(np.asarray(out.embedding)).all()
+
+
+# ---------------------------------------------------------------------------
+# Stage faults (between-stage injection)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_cached_embedding_caught_by_cluster_guard():
+    pipe = faults.wrap_stage(SpectralPipeline(n_clusters=3), "embed",
+                             faults.poison_embedding)
+    with pytest.raises(PipelineError) as ei:
+        pipe.run(_blobs(), KEY)
+    assert ei.value.stage == "cluster"
+    assert "non-finite" in ei.value.detail
+
+
+# ---------------------------------------------------------------------------
+# Empty-cluster reseeding
+# ---------------------------------------------------------------------------
+
+def _dead_centroid_setup():
+    # two tight blobs, three centroids: the third starts far away and
+    # captures nothing → dead on the first iteration
+    rng = np.random.default_rng(7)
+    x = np.concatenate([rng.normal(size=(20, 2)).astype(np.float32),
+                        20.0 + rng.normal(size=(20, 2)).astype(np.float32)])
+    c0 = jnp.asarray(np.array([[0.0, 0.0], [20.0, 20.0], [500.0, 500.0]],
+                              np.float32))
+    return jnp.asarray(x), c0
+
+
+@pytest.mark.parametrize("iter_mode", ["fused", "two_pass"])
+def test_kmeans_empty_keep_vs_reseed_farthest(iter_mode):
+    x, c0 = _dead_centroid_setup()
+    keep = km.kmeans(x, KMeansConfig(k=3, empty="keep", iter=iter_mode), KEY,
+                     init_centroids=c0)
+    assert np.unique(np.asarray(keep.labels)).size == 2  # dead stays dead
+    res = km.kmeans(x, KMeansConfig(k=3, empty="reseed_farthest",
+                                    iter=iter_mode), KEY, init_centroids=c0)
+    assert np.unique(np.asarray(res.labels)).size == 3  # revived
+    assert float(res.inertia) < float(keep.inertia)
+
+
+def test_kmeans_empty_keep_is_the_default_and_validated():
+    assert KMeansConfig().empty == "keep"
+    with pytest.raises(ValueError, match="empty"):
+        KMeansConfig(empty="typo")
+
+
+def test_cluster_controller_reseeds_empty_clusters():
+    # embed stage produces a fine embedding; poison cluster's seeding by
+    # pinning k-means to a dead start via the stage-fault hook is heavy —
+    # instead drive the controller directly: an embedding with 2 natural
+    # groups, k=3, and a seed that kills one centroid.  kmeans++ practically
+    # never deadlocks here, so force it through a degenerate embedding with
+    # duplicated rows (2 distinct rows, k=3 would trip the prepare guard on
+    # points — but a *cached embedding* skips prepare).
+    emb_rows = np.zeros((30, 3), np.float32)
+    emb_rows[15:, 0] = 1.0
+    from repro.core.spectral import EmbedState
+
+    st = EmbedState(embedding=jnp.asarray(emb_rows),
+                    eigenvalues=jnp.zeros((3,)),
+                    residuals=jnp.zeros((3,)),
+                    restarts=jnp.asarray(0))
+    pipe = SpectralPipeline(n_clusters=3)
+    import repro.core.spectral as spectral
+
+    ps = spectral.PipelineState(embedding=st,
+                                key_cluster=jax.random.PRNGKey(3))
+    fin = pipe._stage_cluster(ps)
+    rep = fin.result.reports[-1]
+    assert rep.stage == "cluster"
+    # 2 distinct embedding rows can host at most 2 live clusters: the
+    # reseed rung fires, and with duplicate-only donors the third stays
+    # dead — degradation is reported, never hidden
+    if int(rep.attempts) == 2:
+        assert any("kmeans_reseed" in r for r in rep.escalations)
+    assert np.isfinite(np.asarray(fin.result.labels)).all()
+
+
+def test_kmeans_sharded_rejects_reseed():
+    from repro.core.distributed_pipeline import kmeans_sharded
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="empty"):
+        kmeans_sharded(jnp.zeros((8, 2)),
+                       KMeansConfig(k=2, empty="reseed_farthest"),
+                       KEY, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-path faults
+# ---------------------------------------------------------------------------
+
+def test_sharded_graph_nan_weights_guarded_eagerly():
+    coo, _ = sbm_graph(20, 3, 0.4, 0.02, seed=5)
+    sharded = partition_coo_by_rows(faults.poison_graph(coo), 1)
+    with pytest.raises(PipelineError, match="non-finite"):
+        SpectralPipeline(n_clusters=3).run(sharded, KEY)
+
+
+def test_sharded_graph_nan_caught_post_hoc_under_jit():
+    coo, _ = sbm_graph(20, 3, 0.4, 0.02, seed=5)
+    sharded = partition_coo_by_rows(faults.poison_graph(coo), 1)
+    pipe = SpectralPipeline(n_clusters=3)
+    out = jax.jit(pipe.run)(sharded, KEY)  # guards idle in-trace
+    problems = health.result_problems(out)
+    assert any("non-finite" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# Escalation / config plumbing units
+# ---------------------------------------------------------------------------
+
+def test_escalate_basis_widens_and_clamps():
+    cfg = lz.LanczosConfig(k=4, m=10, max_restarts=8)
+    wid = lz.escalate_basis(cfg, n=1000)
+    assert wid.m == 16 and wid.max_restarts == 16
+    clamped = lz.escalate_basis(cfg, n=12)
+    assert clamped.m == 11  # n - block_size
+    lz.validate_basis(clamped, 12)  # still constructs
+
+
+def test_health_config_validates():
+    with pytest.raises(ValueError, match="max_attempts"):
+        HealthConfig(max_attempts=0)
+    with pytest.raises(ValueError, match="basis_widen"):
+        HealthConfig(basis_widen=1.0)
+    with pytest.raises(ValueError, match="cheb_margin"):
+        EigConfig(cheb_margin=0.0)
+
+
+def test_health_round_trips_through_pipeline_json():
+    pipe = SpectralPipeline(
+        n_clusters=4, health=HealthConfig(max_attempts=5, basis_widen=2.0),
+        eig=EigConfig(strict=True, cheb_margin=0.05))
+    blob = json.dumps(pipe.to_dict())
+    assert SpectralPipeline.from_dict(json.loads(blob)) == pipe
+
+
+def test_stage_report_is_a_pytree_with_static_metadata():
+    rep = StageReport("embed", escalations=("rung",), attempts=2,
+                      converged=jnp.asarray(True),
+                      residual_max=jnp.asarray(0.5), wall_s=1.0)
+    mapped = jax.tree_util.tree_map(lambda v: v, rep)
+    assert mapped.stage == "embed" and mapped.escalations == ("rung",)
+    leaves = jax.tree_util.tree_leaves(rep)
+    assert len(leaves) == 4  # numerics only; strings are aux data
+
+
+def test_pipeline_error_fields():
+    e = PipelineError("embed", "boom", ladder=("a", "b"), remedy="do c")
+    assert e.stage == "embed" and e.ladder == ("a", "b") and e.remedy == "do c"
+    assert isinstance(e, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# Serve-loop isolation (in-process)
+# ---------------------------------------------------------------------------
+
+def test_serve_cluster_isolates_poisoned_requests():
+    import argparse
+
+    from repro.launch.serve import serve_cluster
+
+    args = argparse.Namespace(
+        n=80, clusters=2, requests=2, recluster_k=None, deadline_s=None,
+        strict=False, inject_fault="nan-graph")
+    failures = serve_cluster(args)
+    assert failures == 1  # req 1 poisoned, req 0 served
