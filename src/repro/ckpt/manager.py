@@ -134,6 +134,40 @@ class CheckpointManager:
                 return step, self.restore(step, example_tree)
         return None
 
+    def restore_dict(self, step: int) -> dict:
+        """Example-free restore for checkpoints whose tree was a FLAT dict
+        of arrays: the manifest's treedef repr is then literal JSON
+        ``{name: leaf_index}``, so the structure round-trips without an
+        example tree.  This is the serving-registry / pipeline-state codec
+        path (both serialize through a flat name→array dict precisely so
+        restore needs no live pytree to imitate).
+        """
+        p = os.path.join(self.dir, f"step_{step:08d}")
+        manifest = json.load(open(os.path.join(p, "manifest.json")))
+        try:
+            index = json.loads(manifest["treedef"])
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"checkpoint step {step} was not saved from a flat dict "
+                f"(treedef is not literal JSON) — use restore(step, "
+                f"example_tree)") from e
+        if not isinstance(index, dict):
+            raise ValueError(
+                f"checkpoint step {step} holds a {type(index).__name__} "
+                f"tree, not a flat dict — use restore(step, example_tree)")
+        leaves = [np.load(os.path.join(p, l["file"]))
+                  for l in manifest["leaves"]]
+        return {name: leaves[i] for name, i in index.items()}
+
+    def delete(self, step: int) -> None:
+        """Drop one checkpoint (registry gate-failure cleanup — a version
+        that failed its health gate must not be restorable as 'latest')."""
+        self.wait()
+        shutil.rmtree(os.path.join(self.dir, f"step_{step:08d}"),
+                      ignore_errors=True)
+        shutil.rmtree(os.path.join(self.dir, f"step_{step:08d}.tmp"),
+                      ignore_errors=True)
+
 
 def _tree_encode(o):
     return repr(o)

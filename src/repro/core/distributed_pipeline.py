@@ -179,6 +179,18 @@ def kmeans_sharded(
     contraction and leaves the collective schedule to the partitioner.
     The final-inertia psum happens once, outside the loop.
 
+    ``KMeansConfig(empty="reseed_farthest")`` adds a SECOND packed psum per
+    iteration, only under that config: each shard contributes its k locally
+    farthest points as ``[row | dmin]`` candidates written into a disjoint
+    slice of a zero ``[S·k, d+1]`` buffer (``dynamic_update_slice`` at
+    ``shard_index·k``), the psum overlays the slices, and a global
+    ``top_k`` over the S·k candidate distances selects the donors — every
+    point in the global top-k is in its own shard's top-k, so the
+    candidate set is exact and the reseed matches the single-device
+    :func:`repro.core.kmeans.reseed_empty_farthest` bitwise on tie-free
+    data (the parity test in tests/test_distributed.py pins it).  Needs
+    ``n // S >= k`` rows per shard so each shard can fill its slice.
+
     ``x.shape[0]`` must divide evenly by the mesh axis size.  Seeding runs
     on the global (GSPMD-sharded) array — ``row_at``'s one-hot contractions
     already shard cleanly.
@@ -188,21 +200,19 @@ def kmeans_sharded(
             "kmeans_sharded runs the fused one-pass engine only (the "
             "two-pass modes stay on the GSPMD formulation via km.kmeans); "
             f"got KMeansConfig.iter={cfg.iter!r}")
-    if cfg.empty != "keep":
-        raise ValueError(
-            "kmeans_sharded keeps the paper's empty-cluster policy: the "
-            "packed [k, d+2] psum carries no global farthest-point view, so "
-            "KMeansConfig(empty='reseed_farthest') would need an extra "
-            "collective per iteration — use the GSPMD plan (variant='gspmd') "
-            "or single-device kmeans for reseeding; got "
-            f"empty={cfg.empty!r}")
     if cfg.k is None:
         raise ValueError("KMeansConfig.k is unset — standalone kmeans_sharded "
                          "needs an explicit k (use cfg.resolved(k))")
     axes = _axis_tuple(axis)
     n, d = x.shape
     k = cfg.k
-    assert n % _axis_size(mesh, axes) == 0, (n, mesh.shape)
+    n_shards = _axis_size(mesh, axes)
+    assert n % n_shards == 0, (n, mesh.shape)
+    if cfg.empty == "reseed_farthest" and n // n_shards < k:
+        raise ValueError(
+            f"KMeansConfig(empty='reseed_farthest') under kmeans_sharded "
+            f"needs at least k rows per shard (each shard contributes k "
+            f"farthest-point candidates): n//S = {n // n_shards} < k = {k}")
     c0 = km.seed_centroids(x, cfg, key) if init_centroids is None else init_centroids
 
     @partial(
@@ -217,6 +227,29 @@ def kmeans_sharded(
         x_norm = (xf * xf).sum(1)
         labels0 = jnp.full((x_blk.shape[0],), -1, jnp.int32)
 
+        def shard_index():
+            # linearized index over the (possibly multi-)axis tuple,
+            # row-major like the row partitioning itself
+            idx = jnp.zeros((), jnp.int32)
+            for a in axes:
+                idx = idx * _axis_size(mesh, (a,)) + jax.lax.axis_index(a)
+            return idx
+
+        def global_farthest(dmin):
+            # the reseed donor pool: psum #2 overlays each shard's k
+            # locally-farthest [row | dmin] candidates into its own slice
+            # of a zero [S·k, d+1] buffer, then a replicated top_k picks
+            # the global k — exact, since a globally-farthest point is
+            # locally farthest on its shard
+            vals, idx = jax.lax.top_k(dmin, k)
+            cand = jnp.concatenate([xf[idx], vals[:, None]], axis=1)
+            buf = jnp.zeros((n_shards * k, d + 1), jnp.float32)
+            buf = jax.lax.dynamic_update_slice(
+                buf, cand, (shard_index() * k, jnp.zeros((), jnp.int32)))
+            buf = jax.lax.psum(buf, axes)  # reseed-only second collective
+            _, sel = jax.lax.top_k(buf[:, d], k)
+            return buf[sel, :d]  # [k, d] donors, farthest first
+
         def one_iter(c, labels):
             new_labels, dmin, sums, counts = km.lloyd_iter(x_blk, c, x_norm, cfg)
             changed_pc = jax.ops.segment_sum(
@@ -226,6 +259,14 @@ def kmeans_sharded(
                 [sums, counts[:, None], changed_pc[:, None]], axis=1)
             packed = jax.lax.psum(packed, axes)  # the iteration's one collective
             new_c = km.centroids_from_sums(packed[:, :d], packed[:, d], c)
+            if cfg.empty == "reseed_farthest":  # static branch, like km.kmeans
+                counts_g = packed[:, d]
+                empty = counts_g <= 0
+                donors = global_farthest(dmin)
+                rank = jnp.clip(jnp.cumsum(empty.astype(jnp.int32)) - 1,
+                                0, k - 1)
+                new_c = jnp.where(empty[:, None], donors[rank],
+                                  new_c.astype(jnp.float32)).astype(new_c.dtype)
             return new_c, new_labels, dmin, packed[:, d + 1].sum()
 
         if cfg.fixed_iters is not None:

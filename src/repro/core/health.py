@@ -260,6 +260,40 @@ def check_graph(val: Array) -> None:
 # Post-hoc result enforcement (the jitted-path complement of the guards)
 # ---------------------------------------------------------------------------
 
+def numeric_problems(tree, context: str = "") -> Tuple[str, ...]:
+    """Host-side non-finite scan of a nested dict/list/tuple of numbers or
+    arrays — the :func:`result_problems` discipline generalized to metric
+    trees (roofline terms, benchmark summaries).  Returns human-readable
+    problem strings naming the offending path; empty means healthy.
+    Non-numeric leaves (strings, None) are ignored."""
+    problems = []
+
+    def visit(path, v):
+        if isinstance(v, dict):
+            for k, sub in v.items():
+                visit(f"{path}.{k}" if path else str(k), sub)
+        elif isinstance(v, (list, tuple)):
+            for i, sub in enumerate(v):
+                visit(f"{path}[{i}]", sub)
+        elif isinstance(v, (int, bool, str, bytes)) or v is None:
+            return
+        else:
+            try:
+                arr = np.asarray(v)
+            except Exception:
+                return
+            if arr.dtype.kind not in "fc":
+                return
+            bad = int((~np.isfinite(arr)).sum())
+            if bad:
+                problems.append(f"non-finite value at {path!r}"
+                                + (f" in {context}" if context else "")
+                                + (f" ({bad} entries)" if arr.size > 1 else ""))
+
+    visit("", tree)
+    return tuple(problems)
+
+
 def result_problems(result) -> Tuple[str, ...]:
     """Host-side scan of a finished :class:`SpectralResult` for the problems
     the eager guards would have raised on — the enforcement hook for callers

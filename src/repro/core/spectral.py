@@ -377,6 +377,12 @@ class PipelineState:
 # reductions sit between graph construction and the eigensolve (Stage 1.5),
 # and refine — the coarse→fine lift — must follow embed.
 _STAGE_ORDER = ("prepare", "sparsify", "coarsen", "embed", "refine", "cluster")
+
+
+def _stage_done(name: str, provenance: Tuple[str, ...]) -> bool:
+    """Has ``name`` already run in this state?  Provenance entries are the
+    stage name or ``name[annotation]`` (reductions record their numbers)."""
+    return any(p == name or p.startswith(name + "[") for p in provenance)
 _REQUIRED_STAGES = ("prepare", "embed", "cluster")
 DEFAULT_STAGES = ("prepare", "embed", "cluster")
 
@@ -711,10 +717,10 @@ class SpectralPipeline:
         )
 
     def _kmeans_sharded_dispatch(self, n: int, kcfg: KMeansConfig) -> bool:
-        """True iff Stage 3 routes to the shard_map ``kmeans_sharded`` loop —
-        the escalation controller consults this too: the packed one-psum
-        accumulator has no global farthest-point view, so the reseed rung is
-        unavailable there (and ``kmeans_sharded`` rejects it)."""
+        """True iff Stage 3 routes to the shard_map ``kmeans_sharded`` loop.
+        The reseed rung is available there too: ``empty="reseed_farthest"``
+        adds a second packed psum of per-shard farthest-point candidates
+        (it only needs n//S >= k rows per shard)."""
         plan = self.plan
         if not (plan.device == "sharded" and plan.variant == "shard_map"
                 and kcfg.iter == "fused" and plan.mesh is not None):
@@ -978,12 +984,18 @@ class SpectralPipeline:
             empty = kcfg.k - int(np.unique(np.asarray(res.labels)).size)
             bad = not np.isfinite(np.asarray(res.kmeans_inertia)).all()
             # one reseed rung: dead centroids revive from the farthest
-            # points.  Unavailable when the config already reseeds or when
-            # Stage 3 routes to the packed shard_map accumulator (no global
-            # farthest-point view there — kmeans_sharded rejects it).
-            can_reseed = (kcfg.empty == "keep"
-                          and not self._kmeans_sharded_dispatch(
-                              st.embedding.embedding.shape[0], kcfg))
+            # points.  Unavailable only when the config already reseeds
+            # (the shard_map path reseeds too, via its second packed psum
+            # of per-shard farthest candidates — needs k rows per shard).
+            n_rows = st.embedding.embedding.shape[0]
+            can_reseed = kcfg.empty == "keep"
+            if can_reseed and self._kmeans_sharded_dispatch(n_rows, kcfg):
+                import math as _math
+
+                axes = (self.plan.axis,) if isinstance(self.plan.axis, str) \
+                    else tuple(self.plan.axis)
+                shards = _math.prod(self.plan.mesh.shape[a] for a in axes)
+                can_reseed = n_rows // shards >= kcfg.k
             if (empty > 0 or bad) and attempts < hc.max_attempts \
                     and can_reseed:
                 rungs.append(f"kmeans_reseed_farthest[empty={empty}]")
@@ -1013,21 +1025,49 @@ class SpectralPipeline:
             st, result=res, reports=reports,
             provenance=st.provenance + ("cluster",))
 
-    def run_stages(self, state: PipelineState) -> PipelineState:
+    def run_stages(self, state: PipelineState, *,
+                   checkpoint_dir: Optional[str] = None) -> PipelineState:
         """Execute the configured stage DAG over a :class:`PipelineState` —
         the spelled-out form of :meth:`run` (which builds the initial state,
         splits the keys, and returns ``state.result``).  Each stage is the
         ``_stage_<name>`` method; the tuple was validated at construction to
-        be a canonical-order subsequence with the required stages present."""
+        be a canonical-order subsequence with the required stages present.
+
+        Stages already recorded in ``state.provenance`` are skipped — that
+        is the whole resume mechanism: a state restored from a checkpoint
+        re-enters here and only the unfinished suffix runs.  With
+        ``checkpoint_dir`` set, a :class:`PipelineError` first persists the
+        completed-stage prefix (crash-consistent, via
+        :mod:`repro.core.state_io`) and gains a ``checkpoint`` attribute
+        naming the directory before propagating.
+        """
         for name in self.stages:
-            state = getattr(self, f"_stage_{name}")(state)
+            if _stage_done(name, state.provenance):
+                continue
+            try:
+                state = getattr(self, f"_stage_{name}")(state)
+            except PipelineError as e:
+                if checkpoint_dir is not None:
+                    from repro.core import state_io
+
+                    e.checkpoint = state_io.save_state(
+                        checkpoint_dir, state, self)
+                    note = (f"completed-stage prefix saved to "
+                            f"{checkpoint_dir!r} — fix the config and "
+                            f"run(resume_from=...)")
+                    e.remedy = (e.remedy + "; " if e.remedy else "") + note
+                    e.args = (f"{e.args[0]}; {note}",) if e.args else (note,)
+                raise
         return state
 
     # -- end to end ---------------------------------------------------------
 
-    def run(self, data: Union[Array, COO, ShardedCOO], key: Array, *,
+    def run(self, data: Union[Array, COO, ShardedCOO, None] = None,
+            key: Optional[Array] = None, *,
             points: Optional[Array] = None,
-            operator: Optional[LinearOperator] = None) -> SpectralResult:
+            operator: Optional[LinearOperator] = None,
+            checkpoint_dir: Optional[str] = None,
+            resume_from: Optional[str] = None) -> SpectralResult:
         """Points/graph in, labels out — the whole stage DAG under one call.
 
         ``data`` may be raw points ([n, d] array → Stage 1 runs), a COO
@@ -1038,7 +1078,41 @@ class SpectralPipeline:
 
         The key is split once, up front, in the same order as the pre-DAG
         pipeline — labels on the default stage tuple are bitwise-identical.
+
+        ``checkpoint_dir`` arms crash recovery: a :class:`PipelineError`
+        persists the completed-stage prefix there before propagating.
+        ``resume_from`` loads such a prefix instead of taking ``data``/
+        ``key`` (pass neither) — completed stages are skipped, the stored
+        per-stage PRNG keys keep the remainder deterministic.
         """
+        return self.run_state(data, key, points=points, operator=operator,
+                              checkpoint_dir=checkpoint_dir,
+                              resume_from=resume_from).result
+
+    def run_state(self, data: Union[Array, COO, ShardedCOO, None] = None,
+                  key: Optional[Array] = None, *,
+                  points: Optional[Array] = None,
+                  operator: Optional[LinearOperator] = None,
+                  checkpoint_dir: Optional[str] = None,
+                  resume_from: Optional[str] = None) -> PipelineState:
+        """:meth:`run`, but returning the final :class:`PipelineState` —
+        the serving export hook: the state carries everything
+        :func:`repro.serve.oos.build_index` needs (points + result) plus
+        the graph/embedding slots a later re-cluster or checkpoint wants."""
+        if resume_from is not None:
+            if data is not None or key is not None or points is not None:
+                raise ValueError(
+                    "run(resume_from=...) restores points/graph/keys from "
+                    "the checkpoint — don't pass data/key/points alongside")
+            from repro.core import state_io
+
+            state, _ = state_io.load_state(resume_from, self)
+            if operator is not None:
+                state = dataclasses.replace(state,
+                                            operator_override=operator)
+            return self.run_stages(state, checkpoint_dir=checkpoint_dir)
+        if data is None or key is None:
+            raise ValueError("run needs (data, key) — or resume_from=")
         if isinstance(data, (COO, ShardedCOO)):
             if points is not None:
                 raise ValueError(
@@ -1057,7 +1131,7 @@ class SpectralPipeline:
         state = dataclasses.replace(state, key_embed=k_eig,
                                     key_cluster=k_km,
                                     operator_override=operator)
-        return self.run_stages(state).result
+        return self.run_stages(state, checkpoint_dir=checkpoint_dir)
 
     # -- serialization ------------------------------------------------------
 

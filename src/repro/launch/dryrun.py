@@ -177,6 +177,17 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             cost = total
             result["spectral_components"] = detail
 
+    # Structural health gate (same discipline as repro.core.health
+    # result_problems): a non-finite analysis number means the lowering is
+    # broken, not slow — record it as a cell failure, don't emit a report
+    # whose ratios are NaN.
+    from repro.core.health import numeric_problems
+
+    problems = numeric_problems({"memory_analysis": mem, "cost": cost},
+                                context=cell.name)
+    if problems:
+        raise ValueError("; ".join(problems))
+
     report = rl.analyze_raw(
         cell.name, mesh_kind, n_chips,
         flops_dev=cost["flops"], bytes_dev=cost["bytes"], coll_by_kind=cost["coll"],

@@ -101,6 +101,17 @@ def analyze_raw(cell_name: str, mesh_name: str, n_chips: int, *, flops_dev: floa
                 bytes_dev: float, coll_by_kind: Dict[str, float],
                 model_flops_total: float, mem_gb: float,
                 compile_s: float) -> RooflineReport:
+    from repro.core.health import numeric_problems
+
+    problems = numeric_problems(
+        {"flops_dev": flops_dev, "bytes_dev": bytes_dev,
+         "coll_by_kind": coll_by_kind, "model_flops_total": model_flops_total,
+         "memory_per_device_gb": mem_gb},
+        context=f"roofline terms of {cell_name}@{mesh_name}")
+    if problems:
+        # A NaN here would silently poison every downstream ratio — fail the
+        # cell structurally (dryrun records it and exits non-zero).
+        raise ValueError("; ".join(problems))
     coll_total = float(sum(coll_by_kind.values()))
     compute_s = flops_dev / PEAK_FLOPS
     memory_s = bytes_dev / HBM_BW

@@ -1,11 +1,16 @@
-"""Serving launcher: batched spectral-clustering jobs OR LM decode.
+"""Serving launcher: batched spectral-clustering jobs, online OOS, LM decode.
 
     python -m repro.launch.serve --mode cluster --n 20000 --clusters 64
+    python -m repro.launch.serve --mode serve --n 4000 --clusters 8 \\
+        --requests 64 --registry-dir /tmp/reg
     python -m repro.launch.serve --mode decode --arch qwen3-0.6b --smoke
 
 ``cluster`` mode is the paper's serving shape: accept graphs, return labels
-(the batched-requests analogue for a clustering system).  ``decode`` mode
-runs the LM decode path with a KV cache (one compiled step, stepped N times).
+(the batched-requests analogue for a clustering system).  ``serve`` mode is
+the online subsystem (:mod:`repro.serve`): train one index, answer point
+queries via out-of-sample extension through the micro-batcher — no
+eigensolve per request.  ``decode`` mode runs the LM decode path with a KV
+cache (one compiled step, stepped N times).
 """
 from __future__ import annotations
 
@@ -131,6 +136,153 @@ def serve_cluster(args) -> int:
     return failures
 
 
+def serve_online(args) -> int:
+    """Online point-labelling over the :mod:`repro.serve` subsystem.
+
+    Train once (full pipeline on a blob pool), build a
+    :class:`~repro.serve.oos.ServingIndex`, optionally publish it through
+    the versioned registry, then drive query requests through the
+    :class:`~repro.serve.batcher.MicroBatcher` into the ONE compiled
+    :func:`~repro.serve.oos.serve_fn`.  Served embeddings feed the
+    mini-batch k-means stream; when centroid drift crosses the threshold a
+    refreshed index version is published (health-gated, atomic swap) and
+    hot-swapped into the batcher via ``set_fn`` — the registry/stream loop
+    end to end.
+
+    Keeps the PR 8 contract: per-request fault isolation (a poisoned
+    request fails structurally via
+    :func:`~repro.core.health.numeric_problems` on its rows, neighbors
+    keep serving), ``--deadline-s`` wall budgets, exit code = failure
+    count.  ``--inject-fault nan-query`` poisons every odd request.
+    """
+    import functools
+    import json
+    import sys
+
+    import numpy as np
+
+    from repro.core.health import numeric_problems
+    from repro.core.spectral import SpectralPipeline
+    from repro.serve import (
+        BatchConfig,
+        MicroBatcher,
+        OOSConfig,
+        adjusted_rand_index,
+        build_index,
+        needs_refresh,
+        rebase,
+        serve_fn,
+        stream_from_index,
+        stream_update,
+    )
+    from repro.serve.oos import ServingIndex
+    from repro.serve.registry import EmbeddingRegistry, RegistryGateError
+
+    rng = np.random.default_rng(0)
+    k, d = args.clusters, args.dim
+    centers = rng.normal(size=(k, d)) * 8.0
+    pool = np.concatenate([
+        centers[i] + rng.normal(size=(args.n // k, d))
+        for i in range(k)]).astype(np.float32)
+
+    pipe = SpectralPipeline(n_clusters=k)
+    print(f"[config] {pipe.to_dict()}")
+    t0 = time.perf_counter()
+    result = pipe.run(jnp.asarray(pool), jax.random.PRNGKey(0))
+    jax.block_until_ready(result.labels)
+    print(f"[train] full pipeline on n={args.n}: "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    oos_cfg = OOSConfig.from_graph_config(pipe.graph, method=args.oos_method)
+    index = build_index(jnp.asarray(pool), result, config=oos_cfg)
+    registry = None
+    if args.registry_dir:
+        registry = EmbeddingRegistry(args.registry_dir)
+        v = registry.publish(index)
+        print(json.dumps({"event": "index_published", "version": v}))
+
+    stream = stream_from_index(index)
+    failures = 0
+    latencies = []
+
+    def fail(req, stage, error):
+        nonlocal failures
+        failures += 1
+        print(json.dumps({"event": "request_error", "req": req,
+                          "stage": stage, "error": error}),
+              file=sys.stderr, flush=True)
+
+    with MicroBatcher(functools.partial(serve_fn, index), d,
+                      BatchConfig(batch_size=args.batch_size,
+                                  max_wait_s=args.max_wait_ms / 1e3)) as mb:
+        for req in range(args.requests):
+            tru = rng.integers(k)
+            q = (centers[tru] + rng.normal(size=(args.rows_per_request, d))
+                 ).astype(np.float32)
+            if args.inject_fault == "nan-query" and req % 2 == 1:
+                q[0, 0] = np.nan
+            t0 = time.perf_counter()
+            try:
+                out = mb.label(q, timeout=30.0)
+            except Exception as e:  # isolation: this request only
+                fail(req, "serve_fn", repr(e))
+                continue
+            latency = time.perf_counter() - t0
+            problems = numeric_problems(
+                {"embedding": out.embedding, "dist2": out.dist2},
+                context=f"req {req}")
+            if problems:
+                fail(req, "post_hoc", "; ".join(problems))
+                continue
+            if args.deadline_s is not None and latency > args.deadline_s:
+                fail(req, "deadline",
+                     f"latency {latency:.3f}s exceeds {args.deadline_s}")
+                continue
+            latencies.append(latency)
+            stream, _ = stream_update(stream, jnp.asarray(out.embedding))
+            if bool(needs_refresh(stream)):
+                # drift: publish refreshed centroids as a new version and
+                # hot-swap it into the batcher (full re-embed is the
+                # offline analogue — see DESIGN.md §16)
+                new_index = ServingIndex(
+                    points=index.points, embedding=index.embedding,
+                    centroids=stream.centroids, labels=index.labels,
+                    config=index.config)
+                if registry is not None:
+                    try:
+                        v = registry.publish(new_index)
+                        print(json.dumps(
+                            {"event": "drift_refresh", "req": req,
+                             "version": v}))
+                    except RegistryGateError as e:
+                        fail(req, "refresh_gate", str(e))
+                        continue
+                index = new_index
+                mb.set_fn(functools.partial(serve_fn, index))
+                stream = rebase(stream)
+
+        stats = mb.stats
+    lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
+    summary = {
+        "event": "serve_summary", "requests": args.requests,
+        "failures": failures, "batches": stats.batches,
+        "fill": round(stats.fill, 3),
+        "p50_ms": round(float(lat[len(lat) // 2]) * 1e3, 2),
+        "p99_ms": round(float(lat[min(int(len(lat) * 0.99),
+                                      len(lat) - 1)]) * 1e3, 2),
+        "train_ari_vs_served": None,
+    }
+    # diagnostic: re-serve the pool through OOS — labels should reproduce
+    # the training clustering (the cheap in-process parity signal; the
+    # held-out gate lives in benchmarks/bench_serving.py)
+    pool_out = serve_fn(index, jnp.asarray(pool[:min(args.n, 2048)]))
+    summary["train_ari_vs_served"] = round(adjusted_rand_index(
+        np.asarray(pool_out.labels),
+        np.asarray(result.labels)[:min(args.n, 2048)]), 4)
+    print(json.dumps(summary), flush=True)
+    return failures
+
+
 def serve_decode(args):
     from repro.models import transformer as tfm
 
@@ -159,10 +311,22 @@ def serve_decode(args):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["cluster", "decode"], default="cluster")
+    ap.add_argument("--mode", choices=["cluster", "serve", "decode"],
+                    default="cluster")
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--clusters", type=int, default=16)
     ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--dim", type=int, default=16,
+                    help="serve mode: point dimensionality")
+    ap.add_argument("--oos-method", choices=["exact", "lsh"], default="exact",
+                    help="serve mode: out-of-sample neighbor search")
+    ap.add_argument("--batch-size", type=int, default=64,
+                    help="serve mode: static rows of the compiled batch")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="serve mode: micro-batcher max-wait flush")
+    ap.add_argument("--rows-per-request", type=int, default=4)
+    ap.add_argument("--registry-dir", default=None,
+                    help="serve mode: publish versioned index snapshots here")
     ap.add_argument("--recluster-k", type=int, nargs="*", default=None,
                     help="extra cluster counts served from the cached "
                          "embedding (Stage 3 only, no second eigensolve)")
@@ -172,22 +336,25 @@ def main(argv=None):
     ap.add_argument("--strict", action="store_true",
                     help="cluster mode: run eagerly with EigConfig(strict=True)"
                          " — live escalation ladders, unconverged embeds raise")
-    ap.add_argument("--inject-fault", choices=["none", "nan-graph"],
+    ap.add_argument("--inject-fault",
+                    choices=["none", "nan-graph", "nan-query"],
                     default="none",
-                    help="poison every odd request's graph (fault-isolation "
-                         "smoke: the loop must survive, exit code counts them)")
+                    help="poison every odd request (nan-graph: cluster mode; "
+                         "nan-query: serve mode) — fault-isolation smoke: "
+                         "the loop must survive, exit code counts them)")
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args(argv)
-    if args.mode == "cluster":
+    if args.mode in ("cluster", "serve"):
         import sys
 
+        run = serve_cluster if args.mode == "cluster" else serve_online
         # exit code = failure count (clamped below the shell's reserved
         # range) so orchestrators see partial failure without log parsing
-        sys.exit(min(serve_cluster(args), 125))
+        sys.exit(min(run(args), 125))
     else:
         serve_decode(args)
 

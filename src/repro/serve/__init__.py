@@ -1,0 +1,51 @@
+"""Online serving over the spectral pipeline — embed once, serve many.
+
+The pipeline's expensive stage (the eigensolve) runs once per *embedding
+version*; everything per-request is O(knn_k·d + k·d):
+
+* :mod:`repro.serve.oos` — out-of-sample extension: label unseen points by
+  kernel-weighted interpolation of cached embedding rows + nearest cached
+  centroid (:func:`~repro.serve.oos.serve_fn`, the one compiled function).
+* :mod:`repro.serve.batcher` — fixed-size padded micro-batches with a
+  max-wait flush (:class:`~repro.serve.batcher.MicroBatcher`).
+* :mod:`repro.serve.stream` — mini-batch k-means centroid refresh from
+  served traffic + drift detection that schedules the next re-embed.
+* :mod:`repro.serve.registry` — versioned index snapshots with read-back
+  health gating and an atomic ACTIVE pointer
+  (:class:`~repro.serve.registry.EmbeddingRegistry`).
+
+``python -m repro.launch.serve --mode serve`` is the CLI over all four;
+DESIGN.md §16 is the contract.
+"""
+from repro.serve.batcher import BatchConfig, BatcherStats, MicroBatcher
+from repro.serve.metrics import adjusted_rand_index
+from repro.serve.oos import (
+    OOSConfig,
+    OOSResult,
+    ServingIndex,
+    build_index,
+    index_problems,
+    oos_embed,
+    oos_labels,
+    serve_fn,
+)
+from repro.serve.registry import EmbeddingRegistry, RegistryGateError
+from repro.serve.stream import (
+    StreamConfig,
+    StreamState,
+    drift,
+    needs_refresh,
+    rebase,
+    stream_from_index,
+    stream_init,
+    stream_update,
+)
+
+__all__ = [
+    "BatchConfig", "BatcherStats", "MicroBatcher", "adjusted_rand_index",
+    "OOSConfig", "OOSResult", "ServingIndex", "build_index",
+    "index_problems", "oos_embed", "oos_labels", "serve_fn",
+    "EmbeddingRegistry", "RegistryGateError",
+    "StreamConfig", "StreamState", "drift", "needs_refresh", "rebase",
+    "stream_from_index", "stream_init", "stream_update",
+]

@@ -1,0 +1,237 @@
+"""Batched query execution — many requests, ONE compiled function.
+
+Serving traffic arrives as small requests (often a single point); running a
+jit per request would retrace on every new row count and waste the
+accelerator on tiny launches.  The :class:`MicroBatcher` accumulates
+requests into **fixed-size padded batches**: every flush calls the serving
+function with exactly ``[batch_size, d]`` rows, so there is exactly one
+compiled executable for the whole serving process.
+
+The padded-batch contract (tests/test_serving.py pins it):
+
+* pad rows are zero rows appended after the real queries;
+* the serving function is row-independent (each output row depends only on
+  its query row and the index), so the outputs for the real rows are
+  **bitwise invariant** to the number of pad rows;
+* pad-row outputs are sliced off before futures resolve — no caller ever
+  observes a pad label.
+
+Latency is bounded by the **max-wait flush**: a batch goes out when it is
+full *or* when its oldest request has waited ``max_wait_s``, whichever
+comes first — p99 ≈ max_wait_s + one model call, even at low arrival
+rates.  ``benchmarks/bench_serving.py`` drives a Poisson trace through
+this exact code path and reports the p50/p99 the contract buys.
+
+Failure isolation follows the PR 8 serve-loop contract: an exception in
+the serving function fails the futures of that flush only; the batcher
+thread survives and keeps serving subsequent batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig:
+    """Flush policy knobs.
+
+    ``batch_size`` is the static row count of the one compiled function —
+    pick it for the accelerator, not the traffic (pad rows are nearly free
+    next to a retrace).  ``max_wait_s`` bounds the queueing delay of the
+    first request in a batch; it is the knob that trades p99 against batch
+    fill.
+    """
+
+    batch_size: int = 64
+    max_wait_s: float = 0.01
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError(
+                f"BatchConfig.batch_size must be >= 1, got {self.batch_size}")
+        if self.max_wait_s <= 0:
+            raise ValueError(
+                f"BatchConfig.max_wait_s must be > 0, got {self.max_wait_s}")
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    """Flush accounting (read after a trace for fill/padding ratios)."""
+
+    batches: int = 0
+    rows: int = 0  # real query rows served
+    pad_rows: int = 0  # zero rows added to fill batches
+    full_flushes: int = 0  # batch went out because it filled
+    timed_flushes: int = 0  # batch went out on the max-wait deadline
+    failed_batches: int = 0  # serving-fn exceptions (futures got the error)
+
+    @property
+    def fill(self) -> float:
+        total = self.rows + self.pad_rows
+        return self.rows / total if total else 0.0
+
+
+class _Pending:
+    __slots__ = ("rows", "future", "t0")
+
+    def __init__(self, rows: np.ndarray, future: Future, t0: float):
+        self.rows = rows
+        self.future = future
+        self.t0 = t0
+
+
+class MicroBatcher:
+    """Accumulate point-labelling requests into fixed-size padded batches.
+
+    ``fn(batch: [batch_size, d] f32) -> pytree`` is the serving function;
+    every leaf of its output must have leading dimension ``batch_size``
+    (rows are sliced back out per request).  Typically a
+    ``functools.partial(serve_fn, index)`` closure over a
+    :class:`~repro.serve.oos.ServingIndex` — swap the index between
+    flushes with :meth:`set_fn` (the registry refresh path; takes effect
+    on the next flush, in-flight batches finish on the old version).
+
+    Thread-safe producers: :meth:`submit` may be called from any number of
+    threads; a single background thread owns flushing.  Use as a context
+    manager (or call :meth:`close`) so the flush thread drains and exits.
+    """
+
+    def __init__(self, fn: Callable[[np.ndarray], Any], feature_dim: int,
+                 config: BatchConfig = BatchConfig()):
+        self._fn = fn
+        self.d = feature_dim
+        self.config = config
+        self.stats = BatcherStats()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: List[_Pending] = []
+        self._queued_rows = 0
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._loop, name="micro-batcher", daemon=True)
+        self._thread.start()
+
+    # -- producer side ------------------------------------------------------
+
+    def submit(self, points) -> Future:
+        """Enqueue one request ([m, d] or a single [d] point); resolves to
+        the serving output rows for exactly those m points."""
+        rows = np.asarray(points, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.ndim != 2 or rows.shape[1] != self.d:
+            raise ValueError(
+                f"request shape {rows.shape} does not match feature_dim="
+                f"{self.d} (expected [m, {self.d}])")
+        if rows.shape[0] > self.config.batch_size:
+            raise ValueError(
+                f"request of {rows.shape[0]} rows exceeds batch_size="
+                f"{self.config.batch_size} — split it (one compiled batch "
+                f"shape is the whole point)")
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._queue.append(_Pending(rows, fut, time.monotonic()))
+            self._queued_rows += rows.shape[0]
+            self._cond.notify_all()
+        return fut
+
+    def label(self, points, timeout: Optional[float] = None):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(points).result(timeout=timeout)
+
+    def set_fn(self, fn: Callable[[np.ndarray], Any]) -> None:
+        """Swap the serving function (zero-downtime refresh: queued and
+        future requests use the new one from the next flush on)."""
+        with self._cond:
+            self._fn = fn
+
+    def close(self, *, drain: bool = True) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+        if not drain:
+            return
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- flush side ---------------------------------------------------------
+
+    def _take_batch_locked(self) -> Tuple[List[_Pending], int, bool]:
+        """Pop whole requests up to batch_size rows (requests are never
+        split across batches — their outputs slice out contiguously)."""
+        took: List[_Pending] = []
+        rows = 0
+        while self._queue:
+            nxt = self._queue[0]
+            if rows + nxt.rows.shape[0] > self.config.batch_size:
+                break
+            took.append(self._queue.pop(0))
+            rows += nxt.rows.shape[0]
+        self._queued_rows -= rows
+        return took, rows, rows == self.config.batch_size
+
+    def _loop(self) -> None:
+        cfg = self.config
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if not self._queue and self._closed:
+                    return
+                # wait for fill or the oldest request's deadline
+                deadline = self._queue[0].t0 + cfg.max_wait_s
+                while (self._queued_rows < cfg.batch_size
+                       and not self._closed):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                took, rows, full = self._take_batch_locked()
+                fn = self._fn
+            if not took:
+                continue
+            self._flush(fn, took, rows, full)
+
+    def _flush(self, fn, took: List[_Pending], rows: int, full: bool) -> None:
+        cfg = self.config
+        batch = np.zeros((cfg.batch_size, self.d), np.float32)
+        off = 0
+        offsets = []
+        for p in took:
+            m = p.rows.shape[0]
+            batch[off:off + m] = p.rows
+            offsets.append((off, m))
+            off += m
+        try:
+            out = fn(batch)
+            out = jax.tree.map(np.asarray, out)  # one host sync per flush
+        except Exception as e:  # isolation: this flush fails, thread lives
+            self.stats.failed_batches += 1
+            for p in took:
+                p.future.set_exception(e)
+            return
+        self.stats.batches += 1
+        self.stats.rows += rows
+        self.stats.pad_rows += cfg.batch_size - rows
+        if full:
+            self.stats.full_flushes += 1
+        else:
+            self.stats.timed_flushes += 1
+        for p, (o, m) in zip(took, offsets):
+            p.future.set_result(jax.tree.map(lambda a: a[o:o + m], out))

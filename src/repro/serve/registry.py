@@ -1,0 +1,170 @@
+"""Versioned embeddings — zero-downtime refresh with a health gate.
+
+A re-embed (drift-triggered or scheduled) must never degrade serving: the
+new embedding is written, *read back*, health-gated, and only then made
+current — and "current" flips atomically, so a crash at any instant leaves
+a servable registry.
+
+Layout (all under one directory)::
+
+    <dir>/step_00000001/            # version 1 snapshot (ckpt/manager.py
+    <dir>/step_00000002/            #   crash-consistent rename protocol)
+    <dir>/ACTIVE.json               # {"version": N} — the serving pointer
+
+Protocol:
+
+* **publish** — snapshot the :class:`~repro.serve.oos.ServingIndex`
+  through :class:`~repro.ckpt.manager.CheckpointManager` (tmp dir → fsync
+  → atomic rename: a half-written version is never visible), restore it
+  from disk (read-back catches serialization faults, not just compute
+  faults), run the health gate on the *restored* copy, then swap
+  ``ACTIVE.json`` via the same tmp+fsync+``os.replace`` idiom.  A gate
+  failure deletes the rejected snapshot and leaves ACTIVE untouched —
+  serving continues on the previous version; that *is* the rollback.
+* **load** — resolve ACTIVE (or an explicit version) to an index.  A
+  missing/corrupt ACTIVE file falls back to the newest intact snapshot.
+* **rollback** — point ACTIVE at the newest intact version below the
+  current one (operator-initiated: the gate passed but production says
+  otherwise).
+
+The snapshot itself is a flat name→array dict (plus a uint8-encoded JSON
+meta leaf carrying the :class:`~repro.serve.oos.OOSConfig`), so restore
+needs no example pytree — the same codec discipline
+:mod:`repro.core.state_io` uses for pipeline-state checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.serve.oos import OOSConfig, ServingIndex, index_problems
+
+ACTIVE_FILE = "ACTIVE.json"
+_META_KEY = "__meta__"
+
+
+class RegistryGateError(RuntimeError):
+    """A published index failed its health gate; ACTIVE was not moved."""
+
+    def __init__(self, version: int, problems: Tuple[str, ...]):
+        self.version = version
+        self.problems = problems
+        super().__init__(
+            f"index version {version} failed the health gate "
+            f"({', '.join(problems)}) — rejected, serving stays on the "
+            f"previous version")
+
+
+def _index_to_tree(index: ServingIndex) -> dict:
+    meta = json.dumps({"config": index.config.to_dict()})
+    return {
+        "points": index.points,
+        "embedding": index.embedding,
+        "centroids": index.centroids,
+        "labels": index.labels,
+        _META_KEY: np.frombuffer(meta.encode("utf-8"), np.uint8).copy(),
+    }
+
+
+def _index_from_tree(tree: dict) -> ServingIndex:
+    meta = json.loads(bytes(np.asarray(tree[_META_KEY])).decode("utf-8"))
+    return ServingIndex(
+        points=jnp.asarray(tree["points"]),
+        embedding=jnp.asarray(tree["embedding"]),
+        centroids=jnp.asarray(tree["centroids"]),
+        labels=jnp.asarray(tree["labels"]),
+        config=OOSConfig(**meta["config"]),
+    )
+
+
+class EmbeddingRegistry:
+    """Versioned :class:`ServingIndex` snapshots with an atomic ACTIVE
+    pointer.  ``keep`` retains that many newest snapshots (the rollback
+    window); the active version is always among them because publish only
+    advances versions."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._mgr = CheckpointManager(directory, keep=keep)
+
+    # -- queries ------------------------------------------------------------
+
+    def versions(self) -> List[int]:
+        """All intact snapshot versions, ascending."""
+        return [s for s in self._mgr.all_steps() if self._mgr._complete(s)]
+
+    def active_version(self) -> Optional[int]:
+        """The served version: ACTIVE.json if intact, else newest snapshot."""
+        path = os.path.join(self.dir, ACTIVE_FILE)
+        try:
+            v = int(json.load(open(path))["version"])
+            if self._mgr._complete(v):
+                return v
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            pass
+        avail = self.versions()
+        return avail[-1] if avail else None
+
+    def load(self, version: Optional[int] = None
+             ) -> Tuple[int, ServingIndex]:
+        """(version, index) for ``version`` (default: the active one)."""
+        if version is None:
+            version = self.active_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no intact index versions in {self.dir!r}")
+        if not self._mgr._complete(version):
+            raise FileNotFoundError(
+                f"index version {version} is missing or incomplete in "
+                f"{self.dir!r}")
+        return version, _index_from_tree(self._mgr.restore_dict(version))
+
+    # -- mutations ----------------------------------------------------------
+
+    def publish(self, index: ServingIndex, *,
+                health_gate: Optional[Callable[[ServingIndex],
+                                               Tuple[str, ...]]]
+                = index_problems) -> int:
+        """Snapshot → read back → gate → atomic ACTIVE swap.  Returns the
+        new version.  Raises :class:`RegistryGateError` (snapshot deleted,
+        ACTIVE untouched) when the gate reports problems."""
+        avail = self._mgr.all_steps()
+        version = (avail[-1] if avail else 0) + 1
+        self._mgr.save(version, _index_to_tree(index), blocking=True)
+        restored = _index_from_tree(self._mgr.restore_dict(version))
+        problems = tuple(health_gate(restored)) if health_gate else ()
+        if problems:
+            self._mgr.delete(version)
+            raise RegistryGateError(version, problems)
+        self._swap_active(version)
+        return version
+
+    def rollback(self) -> int:
+        """Point ACTIVE at the newest intact version below the current one
+        (serving flips on the readers' next :meth:`load`)."""
+        current = self.active_version()
+        older = [v for v in self.versions()
+                 if current is None or v < current]
+        if not older:
+            raise FileNotFoundError(
+                f"no intact version below {current} to roll back to in "
+                f"{self.dir!r}")
+        self._swap_active(older[-1])
+        return older[-1]
+
+    def _swap_active(self, version: int) -> None:
+        # same crash-consistency idiom as the snapshot writer: the pointer
+        # file is either the old version or the new one, never half-written
+        path = os.path.join(self.dir, ACTIVE_FILE)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": version}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)

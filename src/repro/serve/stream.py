@@ -1,0 +1,150 @@
+"""Streaming refresh — mini-batch k-means over the one-pass accumulator.
+
+Served queries are data: as traffic drifts away from the training
+distribution, the cached centroids go stale long before the embedding
+does.  The cheap half of the fix is **mini-batch k-means** (Sculley, WWW
+2010) folded into serving: every labelled batch also updates the centroids
+it was assigned to, with a per-centroid learning rate 1/count so early
+batches move centroids quickly and later ones refine them.
+
+The update statistics come from the PR 3 one-pass accumulator
+(:func:`repro.core.kmeans.lloyd_iter` → labels, dmin, per-cluster sums and
+counts in a single stream over the batch) — the same kernel the training
+Lloyd loop runs, at batch size instead of n.
+
+Padded batches fold in exactly: a pad row is the zero row, so it adds the
+zero vector to its cluster's *sum* — only the *count* is polluted, and
+every pad row lands in the same cluster (argmin over ‖0 − c_j‖² is one
+deterministic j*).  :func:`stream_update` subtracts ``n_pad`` from that
+one count, making the update exact for any (traced) pad amount — no
+recompile per fill level.
+
+The expensive half is drift detection: ``max_j ‖c_j − baseline_j‖`` in
+embedding space (rows are unit-norm, so the shift is an absolute scale).
+When it crosses ``StreamConfig.drift_threshold`` the caller schedules a
+background re-embed (full pipeline) and publishes the result through
+:class:`~repro.serve.registry.EmbeddingRegistry` — streaming keeps labels
+fresh *between* refreshes; it never replaces them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.kmeans as km
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Drift/refresh policy.
+
+    ``drift_threshold`` is in embedding units (rows are NJW-normalized to
+    ‖h‖=1, so 0.1 ≈ a 10% relative centroid move).  ``min_count`` floors
+    the denominator of the per-centroid learning rate — a fresh centroid
+    with count 0 would otherwise be fully replaced by its first batch.
+    """
+
+    drift_threshold: float = 0.1
+    min_count: float = 1.0
+
+    def __post_init__(self):
+        if self.drift_threshold <= 0:
+            raise ValueError(
+                f"StreamConfig.drift_threshold must be > 0, got "
+                f"{self.drift_threshold}")
+        if self.min_count < 0:
+            raise ValueError(
+                f"StreamConfig.min_count must be >= 0, got {self.min_count}")
+
+
+class StreamState(NamedTuple):
+    """The streaming accumulator (a pytree — jit in, jit out)."""
+
+    centroids: Array  # [k, ke] current (refined) centroids
+    counts: Array  # [k] f32 cumulative points folded into each centroid
+    baseline: Array  # [k, ke] centroids at the last full refresh
+    updates: Array  # [] int32 mini-batches folded in since the refresh
+
+
+def stream_init(centroids: Array, counts: Optional[Array] = None,
+                cfg: StreamConfig = StreamConfig()) -> StreamState:
+    """A fresh stream state anchored at ``centroids`` (= the baseline).
+
+    ``counts`` seeds the per-centroid learning-rate denominators; pass the
+    training cluster sizes (see :func:`stream_from_index`) so serving
+    batches refine rather than overwrite.  Defaults to ``min_count``.
+    """
+    c = jnp.asarray(centroids, jnp.float32)
+    if counts is None:
+        counts = jnp.full((c.shape[0],), cfg.min_count, jnp.float32)
+    counts = jnp.maximum(counts.astype(jnp.float32), cfg.min_count)
+    return StreamState(centroids=c, counts=counts, baseline=c,
+                       updates=jnp.zeros((), jnp.int32))
+
+
+def stream_from_index(index, cfg: StreamConfig = StreamConfig()) -> StreamState:
+    """Stream state for a :class:`~repro.serve.oos.ServingIndex`: centroids
+    from the index, counts from the training label histogram."""
+    k = index.n_clusters
+    counts = jnp.zeros((k,), jnp.float32).at[index.labels].add(1.0)
+    return stream_init(index.centroids, counts, cfg)
+
+
+def stream_update(state: StreamState, h: Array,
+                  n_pad: Array | int = 0):
+    """Fold one (possibly padded) batch of embedding rows into the stream.
+
+    ``h`` is ``[B, ke]`` — typically ``OOSResult.embedding`` straight from
+    the serving flush (pad rows are zero rows at the END of the batch, per
+    the batcher contract).  ``n_pad`` may be a traced scalar.  Returns
+    ``(new_state, labels [B])``; pad-row labels are meaningless and the
+    update is exact without them.
+    """
+    k = state.centroids.shape[0]
+    kcfg = km.KMeansConfig(k=k)
+    labels, dmin, sums, counts_b = km.lloyd_iter(
+        h, state.centroids, None, kcfg)
+    # zero-pad correction: pad rows add 0 to sums but 1 each to the count
+    # of the single cluster nearest the origin — subtract them there
+    zlab, _ = km.assign_ref(jnp.zeros((1, h.shape[1]), jnp.float32),
+                            state.centroids)
+    pad_onehot = (jnp.arange(k, dtype=jnp.int32) == zlab[0]).astype(
+        jnp.float32)
+    counts_b = counts_b - jnp.asarray(n_pad, jnp.float32) * pad_onehot
+    counts_b = jnp.maximum(counts_b, 0.0)
+    new_counts = state.counts + counts_b
+    # cumulative mini-batch update: c ← (c·count + Σ_batch x) / new_count,
+    # i.e. per-centroid learning rate counts_b / new_counts (Sculley)
+    new_c = (state.centroids * state.counts[:, None] + sums) \
+        / jnp.maximum(new_counts, 1.0)[:, None]
+    new_c = jnp.where(counts_b[:, None] > 0, new_c, state.centroids)
+    return StreamState(centroids=new_c, counts=new_counts,
+                       baseline=state.baseline,
+                       updates=state.updates + 1), labels
+
+
+def drift(state: StreamState) -> Array:
+    """max_j ‖c_j − baseline_j‖ — the refresh trigger metric (scalar)."""
+    shift = jnp.linalg.norm(state.centroids - state.baseline, axis=1)
+    return shift.max()
+
+
+def needs_refresh(state: StreamState,
+                  cfg: StreamConfig = StreamConfig()) -> Array:
+    """Boolean scalar: has the stream drifted past the re-embed trigger?
+    (jit-safe; the serving loop bool()s it between flushes)."""
+    return drift(state) > cfg.drift_threshold
+
+
+def rebase(state: StreamState) -> StreamState:
+    """Mark a completed refresh: the current centroids become the new
+    baseline and the update counter resets (counts are kept — the stream's
+    confidence in each centroid survives the re-embed)."""
+    return StreamState(centroids=state.centroids, counts=state.counts,
+                       baseline=state.centroids,
+                       updates=jnp.zeros((), jnp.int32))

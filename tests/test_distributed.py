@@ -204,6 +204,56 @@ def test_sharded_kmeans_matches_single_device_and_one_allreduce_per_iter():
     """))
 
 
+def test_sharded_kmeans_reseed_matches_single_device():
+    # empty="reseed_farthest" sharded: the second packed psum overlays each
+    # shard's k farthest [row | dmin] candidates; the revived-centroid
+    # trajectory must match the single-device reseed (and cost exactly one
+    # extra in-loop collective)
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.kmeans import KMeansConfig, kmeans
+        from repro.core.distributed_pipeline import kmeans_sharded
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        kb, n_per, d = 4, 64, 6
+        centers = np.eye(kb, d).astype(np.float32) * 20.0
+        x = jnp.asarray(np.concatenate(
+            [c + rng.normal(size=(n_per, d)) for c in centers]), jnp.float32)
+        # 5th centroid starts far from all data -> guaranteed empty -> the
+        # reseed rung must revive it from the globally farthest point
+        init = jnp.concatenate(
+            [jnp.asarray(centers), jnp.full((1, d), 1e3, jnp.float32)])
+        cfg = KMeansConfig(k=5, max_iters=30, empty="reseed_farthest")
+        key = jax.random.PRNGKey(0)
+        r1 = jax.jit(lambda x, k: kmeans(x, cfg, k, init_centroids=init))(x, key)
+        r2 = jax.jit(lambda x, k: kmeans_sharded(
+            x, cfg, k, mesh=mesh, axis="data", init_centroids=init))(x, key)
+        np.testing.assert_array_equal(np.asarray(r1.labels), np.asarray(r2.labels))
+        np.testing.assert_allclose(np.asarray(r1.centroids), np.asarray(r2.centroids),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(r1.inertia), float(r2.inertia), rtol=1e-5)
+        # the revive actually happened: all 5 clusters occupied
+        assert np.unique(np.asarray(r2.labels)).size == 5
+        # collective budget: default config 1 psum in-loop, reseed exactly 2
+        def psums_in_loops(jaxpr, loop_prims, in_loop=False):
+            cnt = 0
+            for eqn in jaxpr.eqns:
+                sub_in_loop = in_loop or eqn.primitive.name in loop_prims
+                if eqn.primitive.name == "psum" and in_loop:
+                    cnt += 1
+                for v in eqn.params.values():
+                    for j in (v if isinstance(v, (list, tuple)) else [v]):
+                        inner = getattr(j, "jaxpr", j)
+                        if hasattr(inner, "eqns"):
+                            cnt += psums_in_loops(inner, loop_prims, sub_in_loop)
+            return cnt
+        jaxpr = jax.make_jaxpr(lambda x, k: kmeans_sharded(
+            x, cfg, k, mesh=mesh, axis="data", init_centroids=init))(x, key)
+        assert psums_in_loops(jaxpr.jaxpr, ("while",)) == 2
+        print("KMEANS-RESEED-SHARDED-OK")
+    """))
+
+
 def test_sharded_stage1_pallas_dispatch_matches_ref():
     print(_run("""
         import numpy as np, jax, jax.numpy as jnp

@@ -300,13 +300,15 @@ def test_cluster_controller_reseeds_empty_clusters():
     assert np.isfinite(np.asarray(fin.result.labels)).all()
 
 
-def test_kmeans_sharded_rejects_reseed():
+def test_kmeans_sharded_reseed_needs_k_rows_per_shard():
+    # reseed is supported sharded (second packed psum of per-shard farthest
+    # candidates), but each shard must be able to contribute k candidates
     from repro.core.distributed_pipeline import kmeans_sharded
 
     mesh = jax.make_mesh((1,), ("data",))
-    with pytest.raises(ValueError, match="empty"):
+    with pytest.raises(ValueError, match="rows per shard"):
         kmeans_sharded(jnp.zeros((8, 2)),
-                       KMeansConfig(k=2, empty="reseed_farthest"),
+                       KMeansConfig(k=16, empty="reseed_farthest"),
                        KEY, mesh=mesh)
 
 
