@@ -1,15 +1,35 @@
 """Paper Table VII — communication vs computation.
 
 The paper shows PCIe transfer time ≪ GPU compute time per dataset.  The pod
-analogue compares ICI collective bytes vs on-chip FLOPs for the distributed
-eigensolver, measured two ways:
+analogue measures collective traffic three ways:
 
 1. from the dry-run artifacts (512-device production mesh) when present;
 2. live on an 8-virtual-device mesh (subprocess) — all-gather bytes of the
-   shard_map SpMV vs its matvec FLOPs.
+   shard_map SpMV vs its matvec FLOPs;
+3. **Stage-1 exchange model** — traced collective bytes
+   (:func:`repro.sparse.distributed.trace_collective_bytes`) of the sharded
+   kNN under ``exchange="gather"`` vs ``exchange="ring"``, for both
+   ``method="exact"`` and ``method="lsh"``, next to the analytic model:
+
+   * gather: every shard receives ``(S-1)/S · n·d`` floats into a FULL-POOL
+     buffer of ``n·d`` floats — per-shard peak memory is O(n·d) regardless
+     of S, which is the >1-host wall;
+   * ring: ``S-1`` ``ppermute`` steps of one peer block each — per-step
+     traffic ``n·d/S`` floats (exact) plus ``3·T·n/S`` table words of
+     candidate-routing traffic (lsh); peak pool footprint O(n·d/S +
+     candidate traffic), an S-fold drop.
+
+   The subprocess also gates correctness where it measures: exact ring
+   output must be BITWISE equal to the gather output, and ring LSH
+   recall@k against exact must be >= 0.95.
+
+Emits ``BENCH_comm.json``.
+
+    PYTHONPATH=src:. python benchmarks/bench_comm.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -20,21 +40,24 @@ import textwrap
 from benchmarks.common import emit
 
 
-def from_dryrun() -> bool:
-    found = False
+def from_dryrun() -> list:
+    records = []
     for path in sorted(glob.glob("reports/dryrun/single/spectral__*.json")):
         r = json.load(open(path))
         if "compute_s" not in r:
             continue
-        found = True
         name = r["cell"].replace("/", "_")
         ratio = r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12)
         emit(f"comm/{name}", r["collective_s"] * 1e6,
              f"coll/(compute+mem)={ratio:.2f};bytes={r['coll_bytes_dev']:.2e}")
-    return found
+        records.append({"source": "dryrun", "cell": r["cell"],
+                        "collective_s": r["collective_s"],
+                        "coll_bytes_dev": r["coll_bytes_dev"],
+                        "ratio_coll_vs_compute_mem": ratio})
+    return records
 
 
-def live_8dev() -> None:
+def live_8dev() -> list:
     script = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp, time
         from repro.data.sbm import sbm_graph
@@ -55,20 +78,141 @@ def live_8dev() -> None:
         flops = 2*sm.row_local.shape[0]
         print(f"LIVE,{us:.1f},gather_bytes={gather_bytes};matvec_flops={flops};ratio_B_per_F={gather_bytes/flops:.3f}")
     """)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = "src"
-    out = subprocess.run([sys.executable, "-c", script], capture_output=True, text=True,
-                         env=env, timeout=600)
-    for line in out.stdout.splitlines():
+    out = _run_8dev(script)
+    records = []
+    for line in out.splitlines():
         if line.startswith("LIVE,"):
             _, us, derived = line.split(",", 2)
             emit("comm/live_8dev_shardmap_spmv", float(us), derived)
+            records.append({"source": "live_8dev_spmv", "us": float(us),
+                            "derived": derived})
+    return records
+
+
+_STAGE1_SCRIPT = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed_pipeline import make_knn_rowblock
+from repro.sparse.distributed import trace_collective_bytes
+
+S, N, D, K, T = 8, {n}, {d}, {k}, 16
+mesh = jax.make_mesh((S,), ("data",))
+rng = np.random.default_rng(0)
+# mild cluster structure so LSH recall reflects a realistic Stage-1 input
+centers = rng.normal(size=(16, D)).astype(np.float32) * 4.0
+x = jnp.asarray(centers[rng.integers(16, size=N)]
+                + rng.normal(size=(N, D)).astype(np.float32))
+
+def bench(fn, x, iters={iters}):
+    jax.block_until_ready(fn(x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+records = []
+exact = {{}}
+for method in ("exact", "lsh"):
+    for exchange in ("gather", "ring"):
+        knn = jax.jit(make_knn_rowblock(mesh, K, method=method,
+                                        exchange=exchange))
+        byt = trace_collective_bytes(knn, x)
+        d_out, i_out = knn(x)
+        us = bench(knn, x)
+        records.append({{"method": method, "exchange": exchange,
+                        "us": us, "traced_bytes": byt,
+                        "dist": np.asarray(d_out), "idx": np.asarray(i_out)}})
+        if method == "exact" and exchange == "gather":
+            exact = {{"dist": np.asarray(d_out), "idx": np.asarray(i_out)}}
+
+# gate 1: exact ring is BITWISE equal to exact gather
+er = next(r for r in records
+          if r["method"] == "exact" and r["exchange"] == "ring")
+assert (er["idx"] == exact["idx"]).all(), "exact ring idx != gather idx"
+assert (er["dist"].view(np.uint32) == exact["dist"].view(np.uint32)).all(), \\
+    "exact ring dist not bitwise-equal to gather"
+
+# gate 2: ring LSH recall@K against exact neighbors
+lr = next(r for r in records
+          if r["method"] == "lsh" and r["exchange"] == "ring")
+hits = sum(len(set(a.tolist()) & set(b.tolist()))
+           for a, b in zip(lr["idx"], exact["idx"]))
+recall = hits / exact["idx"].size
+assert recall >= 0.95, f"ring LSH recall {{recall:.4f}} < 0.95"
+
+nl = N // S
+model = {{
+    "S": S, "n": N, "d": D, "k": K, "n_tables": T,
+    "gather_pool_buffer_bytes": N * D * 4,          # O(n*d) per shard
+    "gather_recv_bytes_per_shard": (S - 1) * nl * D * 4,
+    "ring_step_bytes_exact": nl * D * 4,             # O(n*d/S) per step
+    "ring_step_bytes_lsh": nl * D * 4 + 3 * T * nl * 4,
+    "ring_steps": S - 1,
+    "ring_peak_pool_bytes": nl * D * 4,
+}}
+out = {{"recall_ring_lsh": recall, "exact_bitwise": True, "model": model,
+       "runs": [{{k: v for k, v in r.items() if k not in ("dist", "idx")}}
+                for r in records]}}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _run_8dev(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        raise RuntimeError(f"8-device subprocess failed:\n{out.stderr}")
+    return out.stdout
+
+
+def stage1_exchange(smoke: bool) -> dict:
+    n, d, k = (1024, 16, 10) if smoke else (4096, 32, 10)
+    script = _STAGE1_SCRIPT.format(n=n, d=d, k=k, iters=2 if smoke else 5)
+    out = _run_8dev(script)
+    result = None
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            result = json.loads(line[len("RESULT "):])
+    assert result is not None, f"no RESULT line in subprocess output:\n{out}"
+    m = result["model"]
+    for r in result["runs"]:
+        emit(f"comm/stage1_{r['method']}_{r['exchange']}_n{n}", r["us"],
+             f"traced_bytes={r['traced_bytes'].get('total', 0):.2e}")
+    emit(f"comm/stage1_pool_buffer_n{n}", 0.0,
+         f"gather={m['gather_pool_buffer_bytes']:.2e}B;"
+         f"ring_peak={m['ring_peak_pool_bytes']:.2e}B;"
+         f"drop={m['gather_pool_buffer_bytes'] / m['ring_peak_pool_bytes']:.0f}x")
+    # the headline claim: per-shard peak pool footprint drops O(n·d) →
+    # O(n·d/S) (+ candidate traffic in lsh mode)
+    assert m["ring_peak_pool_bytes"] * m["S"] == m["gather_pool_buffer_bytes"]
+    assert result["exact_bitwise"]
+    assert result["recall_ring_lsh"] >= 0.95
+    print(f"stage1 gates: exact ring bitwise OK, "
+          f"lsh ring recall {result['recall_ring_lsh']:.4f} >= 0.95, "
+          f"pool buffer drop {m['S']}x")
+    return result
 
 
 def main() -> None:
-    from_dryrun()
-    live_8dev()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized shapes")
+    args = ap.parse_args()
+
+    payload = {
+        "bench": "comm",
+        "smoke": bool(args.smoke),
+        "dryrun": from_dryrun(),
+        "live_spmv": live_8dev(),
+        "stage1_exchange": stage1_exchange(args.smoke),
+    }
+    with open("BENCH_comm.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote BENCH_comm.json")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,23 @@ prepare (graph normalize), embed (Lanczos), cluster (k-means) — plus the
 fused end-to-end ``run``, the same decomposition as the paper's Table III.
 Emits BENCH_pipeline.json alongside the CSV rows.
 
+Consistency discipline: the staged timings use the SAME per-stage PRNG
+keys ``run`` splits internally (``jax.random.split(key, 3)``), so the
+staged and fused measurements cover identical solver work — a historical
+bug timed the stages under a different 2-way split, which let a
+different-restart-count embed make the total < ``us_embed`` (the
+committed dblp_like row once showed 11.2s total vs 20.1s embed, which is
+impossible for the same work).  ``us_total`` is the end-to-end wall
+through the three staged executables in sequence, so it is structurally
+comparable to the per-stage numbers; the single-program ``run`` is
+reported separately as ``us_run_fused`` — cross-stage XLA fusion makes it
+a few percent CHEAPER than the staged total (it may even undercut
+``us_embed``), which is a real effect, not a timing bug, and keeping it
+out of ``us_total`` is what makes the invariant meaningful.  Every record
+carries ``us_stage_sum``/``consistent``, inconsistent records are
+re-timed and then FLAGGED, and the emitted payload asserts
+``us_total >= max(stage)`` for every record.
+
     PYTHONPATH=src:. python benchmarks/bench_pipeline.py [--smoke]
 """
 from __future__ import annotations
@@ -93,6 +110,9 @@ def main() -> None:
                          "end-to-end path is <= 2%% (health on vs off)")
     ap.add_argument("--guard-tolerance", type=float, default=0.02,
                     help="allowed relative overhead for --guard-check")
+    ap.add_argument("--consistency-tol", type=float, default=0.35,
+                    help="allowed |us_total - stage_sum| / stage_sum before "
+                         "a record is re-timed and then flagged")
     args = ap.parse_args()
     datasets = SMOKE_DATASETS if args.smoke else DATASETS
 
@@ -106,19 +126,55 @@ def main() -> None:
         pipe = SpectralPipeline(n_clusters=r, eig=EigConfig(solver=args.solver),
                                 kmeans=KMeansConfig(assign="ref"))
         key = jax.random.PRNGKey(0)
-        k1, k2 = jax.random.split(key)
+        # the SAME split run() performs internally (spectral.py run_state):
+        # staged timings must cover the identical solver work the fused run
+        # does, or the total/stage relation is meaningless
+        _, k_eig, k_km = jax.random.split(key, 3)
 
         prepare = jax.jit(pipe.prepare)
         embed = jax.jit(pipe.embed)
         cluster = jax.jit(pipe.cluster)
         run = jax.jit(lambda w, key: pipe.run(w, key))
 
-        us_prepare = time_fn(prepare, coo, iters=args.iters)
-        state = prepare(coo)
-        us_embed = time_fn(embed, state, k1, iters=args.iters)
-        emb = embed(state, k1)
-        us_cluster = time_fn(cluster, emb, k2, iters=args.iters)
-        us_total = time_fn(run, coo, key, iters=args.iters)
+        def staged_total(w):
+            # the same three compiled executables the stages time, end to
+            # end — us_total relates to the per-stage numbers by
+            # construction (one wall over stage1;stage2;stage3)
+            return cluster(embed(prepare(w), k_eig), k_km)
+
+        def measure():
+            us_prepare = time_fn(prepare, coo, iters=args.iters)
+            state = prepare(coo)
+            us_embed = time_fn(embed, state, k_eig, iters=args.iters)
+            emb = embed(state, k_eig)
+            us_cluster = time_fn(cluster, emb, k_km, iters=args.iters)
+            us_total = time_fn(staged_total, coo, iters=args.iters)
+            return us_prepare, us_embed, us_cluster, us_total
+
+        def consistent(stages, total):
+            # the fused run must cost at least its most expensive stage and
+            # land within tolerance of the stage sum (dispatch overhead and
+            # scheduler noise allow some slack above; fusion may save a
+            # little below)
+            return (total >= max(stages)
+                    and abs(total - sum(stages)) <= args.consistency_tol
+                    * max(sum(stages), 1e-9))
+
+        us_prepare, us_embed, us_cluster, us_total = measure()
+        for _retry in range(2):
+            if consistent((us_prepare, us_embed, us_cluster), us_total):
+                break
+            # noise (or a measurement bug): re-time everything from scratch
+            # and keep each stage's floor rather than committing a
+            # self-contradictory record
+            m2 = measure()
+            us_prepare, us_embed, us_cluster, us_total = (
+                min(us_prepare, m2[0]), min(us_embed, m2[1]),
+                min(us_cluster, m2[2]), min(us_total, m2[3]))
+        # the flag reflects the values actually recorded (post min-merge)
+        flagged = not consistent((us_prepare, us_embed, us_cluster), us_total)
+        stage_sum = us_prepare + us_embed + us_cluster
+        us_run_fused = time_fn(run, coo, key, iters=args.iters)
 
         out = run(coo, key)
         pur = purity(np.asarray(out.labels), truth)
@@ -126,7 +182,10 @@ def main() -> None:
         emit(f"{tag}/prepare", us_prepare)
         emit(f"{tag}/embed", us_embed, f"restarts={int(out.lanczos_restarts)}")
         emit(f"{tag}/cluster", us_cluster, f"iters={int(out.kmeans_iterations)}")
-        emit(f"{tag}/total", us_total, f"purity={pur:.3f}")
+        emit(f"{tag}/total", us_total,
+             f"purity={pur:.3f};stage_sum={stage_sum:.0f}us;"
+             f"fused={us_run_fused:.0f}us"
+             + (";FLAGGED_INCONSISTENT" if flagged else ""))
         records.append({
             "dataset": name,
             "n": coo.shape[0],
@@ -137,6 +196,9 @@ def main() -> None:
             "us_embed": round(us_embed, 1),
             "us_cluster": round(us_cluster, 1),
             "us_total": round(us_total, 1),
+            "us_run_fused": round(us_run_fused, 1),
+            "us_stage_sum": round(stage_sum, 1),
+            "consistent": not flagged,
             "purity": round(pur, 4),
             "lanczos_restarts": int(out.lanczos_restarts),
             "kmeans_iterations": int(out.kmeans_iterations),
@@ -155,6 +217,19 @@ def main() -> None:
     with open("BENCH_pipeline.json", "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote BENCH_pipeline.json ({len(records)} records)")
+
+    # the invariant the regenerated JSON must satisfy: a fused run can never
+    # be cheaper than its most expensive stage over the same work
+    for rec in records:
+        stages = (rec["us_prepare"], rec["us_embed"], rec["us_cluster"])
+        assert rec["us_total"] >= max(stages), (
+            f"{rec['dataset']}: us_total {rec['us_total']} < max stage "
+            f"{max(stages)} — staged and fused timings cover different work")
+        assert rec["consistent"], (
+            f"{rec['dataset']}: total/stage-sum mismatch persisted across "
+            f"re-timing (|{rec['us_total']} - {rec['us_stage_sum']}| > "
+            f"{args.consistency_tol:.0%})")
+    print("consistency invariant OK: us_total >= max(stage) for all records")
 
 
 if __name__ == "__main__":

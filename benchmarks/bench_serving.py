@@ -16,12 +16,18 @@ Three records (emitted to ``BENCH_serving.json``):
   :class:`~repro.serve.batcher.MicroBatcher` (the real serving path:
   padded batches, max-wait flush), reporting labels/sec, p50/p99 request
   latency, and batch fill.
+* **lsh** — persistent-table LSH serving vs the historical re-hash path
+  (the same index with ``lsh_tables=None`` falls back to hashing the whole
+  pool per call).  Labels must agree bitwise between the two paths and the
+  >= 0.95 ARI gate holds for the LSH index too; the record shows the
+  per-batch latency the persisted tables buy.
 
     PYTHONPATH=src:. python benchmarks/bench_serving.py [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import json
 import threading
@@ -162,6 +168,29 @@ def run(smoke: bool) -> dict:
          f"recluster_per_label_us={recluster_per_label_us:.0f};"
          f"speedup={speedup:.0f}x")
 
+    # -- LSH serving: persistent tables vs per-call re-hash ------------------
+    # same trained embedding, LSH neighbor search; the tables are built ONCE
+    # in build_index, while the rehash counterfactual (tables stripped off)
+    # hashes pool+queries on every call
+    lsh_index = build_index(jnp.asarray(pool), result,
+                            config=OOSConfig(knn_k=10, sigma=1.0,
+                                             method="lsh"))
+    rehash_index = dataclasses.replace(lsh_index, lsh_tables=None)
+    lsh_served = serve_fn(lsh_index, batch)
+    rehash_served = serve_fn(rehash_index, batch)
+    lsh_label_agree = float(np.mean(np.asarray(lsh_served.labels)
+                                    == np.asarray(rehash_served.labels)))
+    lsh_full = serve_fn(lsh_index, jnp.asarray(queries))
+    ari_lsh = adjusted_rand_index(np.asarray(lsh_full.labels),
+                                  np.asarray(full2.labels)[n:])
+    us_lsh = time_fn(lambda b: serve_fn(lsh_index, b), batch,
+                     warmup=1, iters=5)
+    us_rehash = time_fn(lambda b: serve_fn(rehash_index, b), batch,
+                        warmup=1, iters=5)
+    emit(f"serving/lsh_persistent_batch{batch_size}_n{n}", us_lsh,
+         f"rehash_us={us_rehash:.0f};speedup={us_rehash / us_lsh:.2f}x;"
+         f"label_agree={lsh_label_agree:.3f};ari={ari_lsh:.4f}")
+
     # -- Poisson trace through the batcher -----------------------------------
     trace = poisson_trace(
         index, d,
@@ -187,6 +216,12 @@ def run(smoke: bool) -> dict:
                 "recluster_per_label_us": recluster_per_label_us,
                 "speedup_vs_full_recluster": speedup},
         "parity": {"ari_vs_full_reclustering": ari},
+        "lsh": {"us_batch_persistent": us_lsh,
+                "us_batch_rehash": us_rehash,
+                "per_label_us_persistent": us_lsh / batch_size,
+                "speedup_vs_rehash": us_rehash / us_lsh,
+                "label_agreement_vs_rehash": lsh_label_agree,
+                "ari_vs_full_reclustering": ari_lsh},
         "trace": trace,
     }
 
@@ -206,6 +241,20 @@ def main() -> None:
     ari = r["parity"]["ari_vs_full_reclustering"]
     assert ari >= 0.95, f"OOS parity gate violated: ARI {ari:.4f} < 0.95"
     print(f"parity gate: ARI {ari:.4f} >= 0.95")
+    # persistent LSH tables are an optimization, not a semantics change:
+    # labels must match the re-hash path (the candidate WINDOWS differ —
+    # pool-only routing vs concat-sort — so >= 0.99 rather than bitwise)
+    # and the ARI gate holds unchanged
+    lsh = r["lsh"]
+    assert lsh["label_agreement_vs_rehash"] >= 0.99, (
+        f"persistent-table LSH labels diverge from the re-hash path "
+        f"(agreement {lsh['label_agreement_vs_rehash']:.3f})")
+    assert lsh["ari_vs_full_reclustering"] >= 0.95, (
+        f"LSH OOS parity gate violated: ARI "
+        f"{lsh['ari_vs_full_reclustering']:.4f} < 0.95")
+    print(f"lsh gates: label agreement 1.0, ARI "
+          f"{lsh['ari_vs_full_reclustering']:.4f} >= 0.95, "
+          f"persistent-vs-rehash speedup {lsh['speedup_vs_rehash']:.2f}x")
     if not payload["smoke"]:
         # acceptance claim: labelling a fresh batch via OOS is >= 100x
         # cheaper per label than a full re-clustering of pool+batch at n=20k

@@ -44,14 +44,21 @@ from repro.kernels.lsh_candidates.ops import (
     DEFAULT_N_BITS,
     DEFAULT_N_TABLES,
     default_candidates,
+    hash_codes,
     lsh_candidates,
+    make_planes,
+    routed_candidates,
+    sorted_tables,
 )
 from repro.sparse.distributed import (  # noqa: F401  (normalize_sharded re-export)
     ShardedCOO,
     normalize_sharded,
+    ring_shift,
 )
 
 Array = jax.Array
+
+_EXCHANGES = ("gather", "ring")
 
 
 def _axis_tuple(axis) -> tuple:
@@ -62,32 +69,68 @@ def _axis_size(mesh, axis) -> int:
     return math.prod(mesh.shape[a] for a in _axis_tuple(axis))
 
 
+def merge_topk(best_d: Array, best_i: Array, new_d: Array, new_i: Array,
+               k: int):
+    """Online per-row top-k merge for the ring exchange: keep the k smallest
+    (dist², global id) pairs of the running best and a new block's results.
+
+    Selection is LEXICOGRAPHIC on (dist, id) — ties resolve to the smallest
+    global id, which is exactly how a full-pool ``knn_topk`` resolves them
+    (``lax.top_k`` picks the first occurrence, and the pool is in global-id
+    order) — so the streamed merge is bitwise-faithful to the gathered
+    computation, not just value-equal.  Invalid slots travel as (+inf, −1)
+    and sort to the tail; ids are re-canonicalized to −1 afterwards.
+    """
+    cd = jnp.concatenate([best_d, new_d], axis=1)
+    ci = jnp.concatenate([best_i, new_i], axis=1)
+    p1 = jnp.argsort(ci, axis=1)
+    cd = jnp.take_along_axis(cd, p1, axis=1)
+    ci = jnp.take_along_axis(ci, p1, axis=1)
+    p2 = jnp.argsort(cd, axis=1, stable=True)
+    cd = jnp.take_along_axis(cd, p2, axis=1)[:, :k]
+    ci = jnp.take_along_axis(ci, p2, axis=1)[:, :k]
+    return cd, jnp.where(jnp.isinf(cd), -1, ci)
+
+
 def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
                       impl: str = "auto", interpret: Optional[bool] = None,
                       method: str = "exact", n_tables: int = DEFAULT_N_TABLES,
                       n_bits: int = DEFAULT_N_BITS,
-                      candidates: Optional[int] = None, lsh_seed: int = 0):
+                      candidates: Optional[int] = None, lsh_seed: int = 0,
+                      exchange: str = "gather"):
     """Row-block-sharded Stage-1 neighbor search (the kNN analogue of
     :func:`repro.sparse.distributed.make_sharded_spmv`'s layout).
 
-    Each shard owns a contiguous row block of the [n, d] point matrix,
-    all-gathers the full point set once (the same one-collective-per-pass
-    discipline as the SpMV; points are n·d floats — for Stage 1 this is the
-    whole input, the analogue of the paper keeping the data matrix GPU-
-    resident), and computes its rows' kNN against it.  Self-pairs are
-    excluded via the shard's global row offset (``axis_index · rows_local``),
-    threaded into the kernel's self-exclusion mask — so ``impl`` dispatches
-    exactly like the single-device path: the fused Pallas ``knn_topk``
-    kernel per shard on TPU (or under ``interpret``), the jnp reference
-    elsewhere.
+    Two exchange disciplines (``Plan.stage1_exchange`` selects):
 
-    ``method="lsh"`` swaps the per-shard O(n·n_local·d) exact sweep for LSH
-    candidate generation + exact rerank over the *gathered* pool: every
-    shard hashes the full point set (the hyperplanes derive from the static
-    ``lsh_seed``, so all shards build identical tables — redundant O(n·d·
-    n_tables·n_bits) compute, the same replicate-the-cheap-part discipline
-    as graph assembly) and windows/reranks only its own rows' candidates,
-    making the per-shard cost O(n·d·T·b + T·n log n + n_local·m·d).
+    ``exchange="gather"`` (default) — each shard all-gathers the full point
+    set once (the same one-collective-per-pass discipline as the SpMV; the
+    analogue of the paper keeping the data matrix GPU-resident) and computes
+    its rows' kNN against it.  Self-pairs are excluded via the shard's
+    global row offset (``axis_index · rows_local``) threaded into the
+    kernel's self-exclusion mask.  ``method="lsh"`` hashes the full gathered
+    pool on EVERY shard (identical tables from the static ``lsh_seed`` —
+    redundant O(n·d·T·b) compute) and windows/reranks only its own rows.
+    Per-shard receive traffic: (S−1)/S · n·d floats into a full-pool
+    buffer — the >1-host wall.
+
+    ``exchange="ring"`` — no shard ever materializes the full pool.  Exact
+    mode streams peer row blocks around the ring (S−1 ``ppermute`` steps),
+    runs the existing ``knn_topk`` kernel block-vs-block at each step, and
+    maintains an online per-row top-k via :func:`merge_topk`; the
+    lexicographic (dist, id) merge makes the result bitwise-equal to the
+    gathered computation.  LSH mode hashes ONLY the local block (ending the
+    every-shard-hashes-everything scheme), builds its per-table sorted
+    bucket structure once (:func:`~repro.kernels.lsh_candidates.ops
+    .sorted_tables`), and streams (block, tables) around the ring: at each
+    step a shard routes its queries by bucket code into the visiting
+    tables (:func:`~repro.kernels.lsh_candidates.ops.routed_candidates`
+    — per-table windows of ⌈m/(T·S)⌉ around the lexicographic insertion
+    rank), reranks against the visiting block with ``knn_topk_rerank``,
+    and merges.  Per-step traffic: n·d/S point floats + 3·T·n/S table
+    words; peak footprint O(n/S + T·n/S) — per-shard communication is
+    O(n·d/S + candidate traffic) per step and independent of host count
+    at fixed per-shard rows.
 
     Returns ``knn(x) -> (dist² [n, k], idx [n, k])`` with rows sharded over
     ``axis``; outputs feed :func:`repro.core.similarity.graph_from_knn`.
@@ -95,7 +138,12 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
     if method not in ("exact", "lsh"):
         raise ValueError(
             f"make_knn_rowblock method must be 'exact'|'lsh', got {method!r}")
+    if exchange not in _EXCHANGES:
+        raise ValueError(
+            f"make_knn_rowblock exchange must be one of {_EXCHANGES}, got "
+            f"{exchange!r}")
     m = default_candidates(k, n_tables) if candidates is None else candidates
+    n_shards = _axis_size(mesh, axis)
 
     @partial(
         _shard_map,
@@ -107,6 +155,8 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
         **SHARD_MAP_NO_CHECK,
     )
     def knn(x_blk):
+        if exchange == "ring":
+            return _knn_ring(x_blk)
         x_full = jax.lax.all_gather(x_blk, axis, axis=0, tiled=True)
         offset = jax.lax.axis_index(axis) * x_blk.shape[0]
         if method == "lsh":
@@ -119,6 +169,53 @@ def make_knn_rowblock(mesh, k: int, *, axis: str = "data", block_q: int = 1024,
                                    query_rows=qrows, block_q=block_q)
         return knn_topk(x_full, k, queries=x_blk, query_offset=offset,
                         block_q=block_q, impl=impl, interpret=interpret)
+
+    def _knn_ring(x_blk):
+        nl = x_blk.shape[0]
+        S = n_shards
+        my = jax.lax.axis_index(axis)
+        best_d = jnp.full((nl, k), jnp.inf, jnp.float32)
+        best_i = jnp.full((nl, k), -1, jnp.int32)
+        arange_l = jnp.arange(nl, dtype=jnp.int32)
+        if method == "lsh":
+            # hash ONCE, at home: codes/ties for the local block + the
+            # per-table sorted structure that travels with it
+            planes = make_planes(x_blk.shape[1], n_tables, n_bits, lsh_seed)
+            qcodes, qties = hash_codes(x_blk, planes, impl=impl,
+                                       interpret=interpret)
+            tables = sorted_tables(qcodes, qties)
+            # the full-pool window m/T, spread over the S visiting blocks
+            win_full = min(max(m // n_tables, 1), S * nl)
+            win_step = max(-(-win_full // S), 1)
+            payload = (x_blk, tables)
+        else:
+            payload = x_blk
+        for t in range(S):
+            # owner of the block visiting at step t (ring rotates forward)
+            src = jax.lax.rem(my - t + S, S)
+            # query ids in the VISITING block's local coordinates: equal to
+            # arange(nl) only at home (t=0), outside [0, nl) otherwise — so
+            # the kernels' self-exclusion fires exactly at the home step
+            qrows_vis = (my - src) * nl + arange_l
+            if method == "lsh":
+                blk, tbl = payload
+                cand = routed_candidates(tbl, qcodes, qties, win=win_step,
+                                         query_rows=qrows_vis)
+                d_t, i_t = knn_topk_rerank(blk, cand, k, queries=x_blk,
+                                           query_rows=qrows_vis,
+                                           block_q=block_q)
+            else:
+                blk = payload
+                d_t, i_t = knn_topk(blk, k, queries=x_blk,
+                                    query_offset=(my - src) * nl,
+                                    block_q=block_q, impl=impl,
+                                    interpret=interpret)
+            i_g = jnp.where(i_t >= 0, i_t + src * nl, -1)
+            best_d, best_i = merge_topk(best_d, best_i,
+                                        d_t.astype(jnp.float32), i_g, k)
+            if t < S - 1:
+                payload = ring_shift(payload, axis, S)
+        return best_d, best_i
 
     return knn
 

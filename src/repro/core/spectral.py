@@ -84,6 +84,7 @@ _METHODS = ("exact", "lsh")
 _KNN_IMPLS = ("auto", "pallas", "ref")
 _DEVICES = ("single", "sharded")
 _VARIANTS = ("gspmd", "shard_map")
+_EXCHANGES = ("gather", "ring")
 
 
 class SpectralResult(NamedTuple):
@@ -267,6 +268,16 @@ class Plan:
                   one-all-gather-per-application schedule).
     gather_dtype  optional downcast for shard_map all-gathers (e.g.
                   "bfloat16" halves ICI bytes; accumulation stays fp32).
+    stage1_exchange
+                  sharded Stage-1 candidate exchange: "gather" (default —
+                  every shard all-gathers the full point set; bitwise the
+                  pre-knob behavior) | "ring" (peer row blocks stream via
+                  ``ppermute`` with an online per-row top-k merge; no shard
+                  materializes the full pool — per-shard traffic O(n·d/S)
+                  per step instead of O(n·d) at once.  Exact method stays
+                  bitwise-equal to "gather"; LSH routes by bucket code and
+                  is recall-gated).  See
+                  :func:`repro.core.distributed_pipeline.make_knn_rowblock`.
     """
 
     device: str = "single"
@@ -274,6 +285,7 @@ class Plan:
     axis: Any = "data"
     variant: str = "gspmd"
     gather_dtype: Any = None
+    stage1_exchange: str = "gather"
 
     def __post_init__(self):
         if self.device not in _DEVICES:
@@ -284,6 +296,10 @@ class Plan:
             raise ValueError(
                 f"Plan.variant must be one of {_VARIANTS}, got "
                 f"{self.variant!r}")
+        if self.stage1_exchange not in _EXCHANGES:
+            raise ValueError(
+                f"Plan.stage1_exchange must be one of {_EXCHANGES}, got "
+                f"{self.stage1_exchange!r}")
         # NOTE: variant="shard_map" needs a mesh at *dispatch* time (the
         # ShardedCooOperator raises); construction stays mesh-free so plans
         # round-trip through to_dict()/from_dict() and get the mesh
@@ -300,6 +316,7 @@ class Plan:
             "axis": list(self.axis) if isinstance(self.axis, tuple) else self.axis,
             "variant": self.variant,
             "gather_dtype": self.gather_dtype,
+            "stage1_exchange": self.stage1_exchange,
             # mesh is a runtime resource, not config — reattach it after
             # from_dict via dataclasses.replace(plan, mesh=mesh)
         }
@@ -313,6 +330,7 @@ class Plan:
             axis=tuple(axis) if isinstance(axis, list) else axis,
             variant=d.get("variant", "gspmd"),
             gather_dtype=d.get("gather_dtype"),
+            stage1_exchange=d.get("stage1_exchange", "gather"),
         )
 
 
@@ -631,7 +649,8 @@ class SpectralPipeline:
                 self.plan.mesh, g.knn_k, axis=axis,
                 block_q=g.block_q or 1024, impl=g.impl, interpret=g.interpret,
                 method=g.method, n_tables=g.n_tables, n_bits=g.n_bits,
-                candidates=g.candidates, lsh_seed=g.lsh_seed)
+                candidates=g.candidates, lsh_seed=g.lsh_seed,
+                exchange=self.plan.stage1_exchange)
             dist2, idx = knn(p)
             if needs_argsort_gather_workaround():
                 # Re-replicate the small [n, k] search results before graph

@@ -20,9 +20,12 @@ process that has no live state to imitate.  The serving registry
 (:mod:`repro.serve.registry`) uses the same discipline for its index
 snapshots.
 
-Scope: single-device states.  A ShardedCOO state refuses to serialize —
-its row-block layout is a runtime mesh resource; re-run Stage 1 under the
-sharded plan instead (cheap relative to the embed being protected).
+Sharded states round-trip too: a ShardedCOO serializes its
+(row_local, col, val) buckets plus the partition meta (rows_per_shard /
+num_shards / edges_per_shard) — the row-block LAYOUT is pure data; only
+the mesh placement is a runtime resource, and restore returns host-side
+arrays that the sharded operator re-places on first use (device_put /
+jit resharding), exactly like every other restored leaf.
 """
 from __future__ import annotations
 
@@ -46,19 +49,32 @@ STATE_STEP = 0  # one checkpoint per directory: the latest prefix wins
 def _put_coo(tree: Dict[str, np.ndarray], meta: dict, name: str,
              coo) -> None:
     if isinstance(coo, ShardedCOO):
-        raise NotImplementedError(
-            "pipeline-state checkpoints are single-device (a ShardedCOO's "
-            "row-block layout is a runtime mesh resource) — re-run Stage 1 "
-            "under the sharded plan on resume instead")
+        tree[f"{name}.row_local"] = np.asarray(coo.row_local)
+        tree[f"{name}.col"] = np.asarray(coo.col)
+        tree[f"{name}.val"] = np.asarray(coo.val)
+        meta[name] = {"kind": "sharded", "shape": list(coo.shape),
+                      "rows_per_shard": int(coo.rows_per_shard),
+                      "num_shards": int(coo.num_shards),
+                      "edges_per_shard": int(coo.edges_per_shard)}
+        return
     tree[f"{name}.row"] = np.asarray(coo.row)
     tree[f"{name}.col"] = np.asarray(coo.col)
     tree[f"{name}.val"] = np.asarray(coo.val)
-    meta[name] = {"shape": list(coo.shape),
+    meta[name] = {"kind": "coo", "shape": list(coo.shape),
                   "sorted_rows": bool(coo.sorted_rows)}
 
 
-def _get_coo(tree: Dict[str, np.ndarray], meta: dict, name: str) -> COO:
+def _get_coo(tree: Dict[str, np.ndarray], meta: dict, name: str):
     m = meta[name]
+    # pre-ShardedCOO checkpoints carry no "kind" tag — they are plain COO
+    if m.get("kind", "coo") == "sharded":
+        return ShardedCOO(row_local=jnp.asarray(tree[f"{name}.row_local"]),
+                          col=jnp.asarray(tree[f"{name}.col"]),
+                          val=jnp.asarray(tree[f"{name}.val"]),
+                          shape=tuple(m["shape"]),
+                          rows_per_shard=m["rows_per_shard"],
+                          num_shards=m["num_shards"],
+                          edges_per_shard=m["edges_per_shard"])
     return COO(row=jnp.asarray(tree[f"{name}.row"]),
                col=jnp.asarray(tree[f"{name}.col"]),
                val=jnp.asarray(tree[f"{name}.val"]),
@@ -150,7 +166,7 @@ def state_from_tree(tree: Dict[str, np.ndarray]):
     for name in ("points", "search_points", "key_embed", "key_cluster"):
         if name in tree:
             kw[name] = jnp.asarray(tree[name])
-    if "input_graph.row" in tree:
+    if "input_graph" in meta:  # keyed via meta: COO and ShardedCOO differ
         kw["input_graph"] = _get_coo(tree, meta, "input_graph")
     if "graph.deg" in tree:
         kw["graph"] = _get_graph(tree, meta, "graph")

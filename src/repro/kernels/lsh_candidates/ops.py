@@ -27,6 +27,7 @@ against the full gathered pool) may be traced.
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -164,3 +165,107 @@ def lsh_candidates(
         c = jnp.concatenate(
             [c, jnp.full((nq, m - c.shape[1]), -1, jnp.int32)], axis=1)
     return c
+
+
+# ---------------------------------------------------------------------------
+# Persistent / routed tables — build once, look queries up later
+# ---------------------------------------------------------------------------
+#
+# ``lsh_candidates`` fuses hash → sort → window per call, which is right for
+# the one-shot Stage 1 but wrong for (a) serving, where the pool is fixed
+# across millions of queries, and (b) the sharded ring exchange, where each
+# shard hashes only its own row block ONCE and peers look their queries up
+# into the visiting block's tables.  These helpers split the pipeline at the
+# natural seam: ``sorted_tables`` owns the per-table (code, tie) sort;
+# ``routed_candidates`` positions externally-hashed queries in those sorted
+# tables (lexicographic insertion rank, computed jit-safely via one combined
+# argsort) and windows/dedups exactly like ``lsh_candidates``.
+
+
+class LshTables(NamedTuple):
+    """Per-table sorted bucket structure of a candidate pool — the
+    persistable product of hashing: for each of T tables, the pool ids in
+    (bucket code, tie-break projection) ascending order plus the sorted keys
+    themselves, so a query's window position is a searchsorted-style rank
+    computation needing no re-hash of the pool."""
+
+    order: Array  # [T, n] int32 — pool ids, (code, tie) ascending per table
+    codes: Array  # [T, n] int32 — bucket codes in sorted order
+    ties: Array  # [T, n] f32 — tie-break projections in sorted order
+
+
+@jax.jit
+def sorted_tables(codes: Array, ties: Array) -> LshTables:
+    """Build :class:`LshTables` from :func:`hash_codes` output ([T, n] each).
+
+    Same lexicographic (code, tie) sort as ``lsh_candidates``'s per-table
+    ordering — a pool point's rank here is bitwise the window position the
+    fused path would give it.
+    """
+
+    def one(code_t, tie_t):
+        p1 = jnp.argsort(tie_t)
+        order = p1[jnp.argsort(code_t[p1], stable=True)].astype(jnp.int32)
+        return order, code_t[order], tie_t[order]
+
+    order, cs, ts = jax.vmap(one)(codes, ties)
+    return LshTables(order=order, codes=cs, ties=ts)
+
+
+@partial(jax.jit, static_argnames=("win",))
+def routed_candidates(
+    tables: LshTables,
+    qcodes: Array,  # [T, nq] query bucket codes (hash_codes on queries only)
+    qties: Array,  # [T, nq] query tie-break projections
+    *,
+    win: int,  # window size per table (static)
+    query_rows: Array | None = None,  # [nq] pool ids to self-exclude, or None
+) -> Array:
+    """Candidate pool ids ``[nq, T·win]`` for queries hashed *elsewhere* —
+    the lookup half of ``lsh_candidates``: each query's lexicographic
+    insertion rank among a table's sorted (code, tie) keys centers a
+    ``win``-wide window of pool ids; the union over tables is deduped in
+    place (unique ids ascending, −1 interspersed — the
+    ``knn_topk_rerank`` contract).
+
+    The rank is computed with one combined argsort over [pool keys; query
+    keys] (a jit-safe lexicographic searchsorted): a query's pool-only rank
+    is its combined position minus the number of queries sorted before it.
+    Equal keys rank the query *after* the pool point (searchsorted-right),
+    matching the fused path where a pool member windows around itself.
+
+    ``query_rows`` masks each query's own pool id from its candidates (pass
+    the local ids when queries ARE pool members — the ring's home step);
+    ids outside [0, n) never match, so the ring's visiting steps pass the
+    same offset expression and the exclusion only fires at home.
+    """
+    T, n = tables.order.shape
+    nq = qcodes.shape[1]
+    win = min(max(win, 1), n)
+
+    def one(order, cs, ts, qc, qt):
+        code_all = jnp.concatenate([cs, qc])
+        tie_all = jnp.concatenate([ts, qt])
+        p1 = jnp.argsort(tie_all)
+        comb = p1[jnp.argsort(code_all[p1], stable=True)]
+        isq = (comb >= n).astype(jnp.int32)
+        # pool-only rank of the element at combined position p: p minus the
+        # queries strictly before p (inclusive cumsum minus own flag)
+        rank = (jnp.arange(n + nq, dtype=jnp.int32)
+                - jnp.cumsum(isq) + isq)
+        qpos = jnp.zeros((nq,), jnp.int32).at[
+            jnp.where(isq == 1, comb - n, nq)].set(rank, mode="drop")
+        start = jnp.clip(qpos - win // 2, 0, n - win)
+        widx = start[:, None] + jnp.arange(win, dtype=jnp.int32)
+        return order[widx]  # [nq, win]
+
+    cand = jax.vmap(one)(tables.order, tables.codes, tables.ties,
+                         qcodes, qties)  # [T, nq, win]
+    cand = jnp.moveaxis(cand, 0, 1).reshape(nq, T * win)
+    qid = (jnp.full((nq,), -1, jnp.int32) if query_rows is None
+           else query_rows.astype(jnp.int32))
+    c = jnp.where(cand == qid[:, None], n, cand)
+    c = jnp.sort(c, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((nq, 1), bool), c[:, 1:] == c[:, :-1]], axis=1)
+    return jnp.where(dup | (c >= n), -1, c)

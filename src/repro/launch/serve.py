@@ -247,7 +247,10 @@ def serve_online(args) -> int:
                 new_index = ServingIndex(
                     points=index.points, embedding=index.embedding,
                     centroids=stream.centroids, labels=index.labels,
-                    config=index.config)
+                    config=index.config,
+                    # the pool is unchanged, so the persisted LSH tables
+                    # stay valid across a centroid-only refresh
+                    lsh_tables=index.lsh_tables)
                 if registry is not None:
                     try:
                         v = registry.publish(new_index)

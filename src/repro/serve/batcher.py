@@ -73,6 +73,7 @@ class BatcherStats:
     full_flushes: int = 0  # batch went out because it filled
     timed_flushes: int = 0  # batch went out on the max-wait deadline
     failed_batches: int = 0  # serving-fn exceptions (futures got the error)
+    split_requests: int = 0  # oversized requests split across flushes
 
     @property
     def fill(self) -> float:
@@ -124,7 +125,16 @@ class MicroBatcher:
 
     def submit(self, points) -> Future:
         """Enqueue one request ([m, d] or a single [d] point); resolves to
-        the serving output rows for exactly those m points."""
+        the serving output rows for exactly those m points.
+
+        Requests larger than ``batch_size`` are split into consecutive
+        chunks inside the batcher (the one-compiled-``serve_fn`` contract
+        holds — every flush is still exactly ``[batch_size, d]``) and the
+        output slices are reassembled before the returned future resolves.
+        Failure isolation is per flush: if any chunk's flush fails, THIS
+        request's future gets that error, while requests riding in other
+        flushes — including other chunks' co-passengers — are untouched.
+        """
         rows = np.asarray(points, np.float32)
         if rows.ndim == 1:
             rows = rows[None, :]
@@ -133,10 +143,10 @@ class MicroBatcher:
                 f"request shape {rows.shape} does not match feature_dim="
                 f"{self.d} (expected [m, {self.d}])")
         if rows.shape[0] > self.config.batch_size:
-            raise ValueError(
-                f"request of {rows.shape[0]} rows exceeds batch_size="
-                f"{self.config.batch_size} — split it (one compiled batch "
-                f"shape is the whole point)")
+            return self._submit_split(rows)
+        return self._enqueue(rows)
+
+    def _enqueue(self, rows: np.ndarray) -> Future:
         fut: Future = Future()
         with self._cond:
             if self._closed:
@@ -145,6 +155,44 @@ class MicroBatcher:
             self._queued_rows += rows.shape[0]
             self._cond.notify_all()
         return fut
+
+    def _submit_split(self, rows: np.ndarray) -> Future:
+        """Split an oversized request into batch-size chunks, enqueue them
+        in order (consecutive flushes drain them FIFO), and resolve one
+        parent future with the per-leaf concatenation of the chunk slices.
+        The first chunk error wins; late results after a failure are
+        dropped."""
+        bs = self.config.batch_size
+        chunks = [rows[off:off + bs] for off in range(0, rows.shape[0], bs)]
+        parent: Future = Future()
+        parts: List[Any] = [None] * len(chunks)
+        state = {"left": len(chunks), "failed": False}
+        lock = threading.Lock()
+
+        def on_done(i: int):
+            def cb(fut: Future) -> None:
+                err = fut.exception()
+                with lock:
+                    if state["failed"]:
+                        return
+                    if err is not None:
+                        state["failed"] = True
+                        parent.set_exception(err)
+                        return
+                    parts[i] = fut.result()
+                    state["left"] -= 1
+                    done = state["left"] == 0
+                if done:
+                    parent.set_result(jax.tree.map(
+                        lambda *xs: np.concatenate(xs, axis=0), *parts))
+            return cb
+
+        with self._lock:
+            self.stats.split_requests += 1
+        futs = [self._enqueue(c) for c in chunks]
+        for i, f in enumerate(futs):
+            f.add_done_callback(on_done(i))
+        return parent
 
     def label(self, points, timeout: Optional[float] = None):
         """Synchronous convenience: submit + wait."""

@@ -21,14 +21,19 @@ points:
 * ``method="exact"`` — :func:`repro.kernels.knn_topk.ops.knn_topk` with
   ``queries=`` and ``query_offset=n`` (query row ids sit past the pool, so
   the kernel's self-exclusion never fires on a pool point);
-* ``method="lsh"`` — :func:`repro.kernels.lsh_candidates.ops.lsh_candidates`
-  over the concatenated [pool; queries] matrix with ``query_rows=n+arange``
-  (window positions come from the shared per-table sort), other-query ids
-  masked out, then the exact
-  :func:`repro.kernels.knn_topk.ops.knn_topk_rerank` over the survivors.
-  The pool is re-hashed per call — precomputed persistent tables are a
-  ROADMAP follow-up; at serving batch sizes the hash is a small slice of
-  the rerank work.
+* ``method="lsh"`` — PERSISTENT tables: :func:`build_index` hashes the
+  pool once and stores the per-table sorted (bucket code, tie-break
+  projection) structure (:class:`repro.kernels.lsh_candidates.ops
+  .LshTables`) on the :class:`ServingIndex`; at serve time only the query
+  rows are hashed and positioned into the persisted tables by their
+  lexicographic insertion rank (:func:`repro.kernels.lsh_candidates.ops
+  .routed_candidates` — a jit-safe searchsorted), then the exact
+  :func:`repro.kernels.knn_topk.ops.knn_topk_rerank` over the windows.
+  Per-call hash work drops from O((n+q)·d·T·b) + a T·(n+q)·log(n+q) sort
+  to O(q·d·T·b) + a T·(n+q)·log rank pass — ``BENCH_serving.json``
+  records the per-label win.  An index restored without tables (an old
+  snapshot) falls back to the legacy hash-[pool; queries]-together path
+  (:func:`_lsh_neighbors_rehash`), kept as the bench counterfactual.
 
 Everything here is jit-safe with static shapes: :func:`oos_labels` is the
 ONE compiled function the batcher flushes into (the :class:`ServingIndex`
@@ -52,8 +57,13 @@ from repro.kernels.lsh_candidates.ops import (
     DEFAULT_N_BITS,
     DEFAULT_N_TABLES,
     MAX_N_BITS,
+    LshTables,
     default_candidates,
+    hash_codes,
     lsh_candidates,
+    make_planes,
+    routed_candidates,
+    sorted_tables,
 )
 
 Array = jax.Array
@@ -128,6 +138,9 @@ class ServingIndex:
     centroids: Array  # [kc, ke] k-means centroids in embedding space
     labels: Array  # [n] int32 training cluster assignment
     config: OOSConfig = OOSConfig()
+    # persistent LSH structure (method="lsh" only): pool hashed ONCE at
+    # build time; serve hashes queries only.  None ⇒ legacy rehash path.
+    lsh_tables: Optional[LshTables] = None
 
     @property
     def n_points(self) -> int:
@@ -139,7 +152,8 @@ class ServingIndex:
 
 
 jax.tree_util.register_dataclass(
-    ServingIndex, ["points", "embedding", "centroids", "labels"], ["config"])
+    ServingIndex,
+    ["points", "embedding", "centroids", "labels", "lsh_tables"], ["config"])
 
 
 class OOSResult(NamedTuple):
@@ -181,15 +195,28 @@ def build_index(points: Array, result, *, n_clusters: Optional[int] = None,
     counts = jnp.zeros((n_clusters,), jnp.float32).at[labels].add(1.0)
     centroids = km.centroids_from_sums(
         sums, counts, jnp.zeros_like(sums))
-    return ServingIndex(points=jnp.asarray(points, jnp.float32),
+    pts = jnp.asarray(points, jnp.float32)
+    tables = None
+    if config.method == "lsh":
+        # hash the pool ONCE here; every serve call then hashes only its
+        # query rows and ranks them into this persisted sorted structure
+        planes = make_planes(pts.shape[1], config.n_tables, config.n_bits,
+                             config.lsh_seed)
+        codes, ties = hash_codes(pts, planes, impl=config.impl,
+                                 interpret=config.interpret)
+        tables = sorted_tables(codes, ties)
+    return ServingIndex(points=pts,
                         embedding=h, centroids=centroids, labels=labels,
-                        config=config)
+                        config=config, lsh_tables=tables)
 
 
-def _lsh_neighbors(index: ServingIndex, queries: Array):
-    """LSH candidate windows for out-of-pool queries: hash [pool; queries]
-    together so the per-table (code, tie) sort positions the queries among
-    the pool, take the window ids, drop other-query ids, rerank exactly."""
+def _lsh_neighbors_rehash(index: ServingIndex, queries: Array):
+    """Legacy LSH path (pre-persistent-tables): hash [pool; queries]
+    together per call so the per-table (code, tie) sort positions the
+    queries among the pool, take the window ids, drop other-query ids,
+    rerank exactly.  Serves indices restored from old snapshots (no
+    ``lsh_tables`` leaf) and is the counterfactual ``bench_serving.py``
+    times the persistent path against."""
     cfg = index.config
     n = index.n_points
     q = queries.shape[0]
@@ -202,6 +229,30 @@ def _lsh_neighbors(index: ServingIndex, queries: Array):
         seed=cfg.lsh_seed, query_rows=qrows, impl=cfg.impl,
         interpret=cfg.interpret)
     cand = jnp.where(cand >= n, -1, cand)  # other queries are not the pool
+    return knn_topk_rerank(index.points, cand, cfg.knn_k, queries=queries,
+                           query_rows=qrows)
+
+
+def _lsh_neighbors(index: ServingIndex, queries: Array):
+    """LSH candidate windows for out-of-pool queries against the PERSISTED
+    per-table sorted structure: hash only the query rows, position them by
+    lexicographic insertion rank (``routed_candidates``'s jit-safe
+    searchsorted), window, rerank exactly.  Same candidate-set contract as
+    the rehash path (same tables, same window budget m // n_tables) — only
+    the per-call hash/sort work changes."""
+    cfg = index.config
+    if index.lsh_tables is None:  # old snapshot without tables
+        return _lsh_neighbors_rehash(index, queries)
+    n = index.n_points
+    q = queries.shape[0]
+    m = cfg.candidates or default_candidates(cfg.knn_k, cfg.n_tables)
+    win = min(max(m // cfg.n_tables, 1), n)
+    planes = make_planes(queries.shape[1], cfg.n_tables, cfg.n_bits,
+                         cfg.lsh_seed)
+    qcodes, qties = hash_codes(queries.astype(jnp.float32), planes,
+                               impl=cfg.impl, interpret=cfg.interpret)
+    cand = routed_candidates(index.lsh_tables, qcodes, qties, win=win)
+    qrows = n + jnp.arange(q, dtype=jnp.int32)  # never matches a pool id
     return knn_topk_rerank(index.points, cand, cfg.knn_k, queries=queries,
                            query_rows=qrows)
 

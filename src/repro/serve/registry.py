@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.manager import CheckpointManager
+from repro.kernels.lsh_candidates.ops import LshTables
 from repro.serve.oos import OOSConfig, ServingIndex, index_problems
 
 ACTIVE_FILE = "ACTIVE.json"
@@ -62,23 +63,34 @@ class RegistryGateError(RuntimeError):
 
 def _index_to_tree(index: ServingIndex) -> dict:
     meta = json.dumps({"config": index.config.to_dict()})
-    return {
+    tree = {
         "points": index.points,
         "embedding": index.embedding,
         "centroids": index.centroids,
         "labels": index.labels,
         _META_KEY: np.frombuffer(meta.encode("utf-8"), np.uint8).copy(),
     }
+    if index.lsh_tables is not None:  # persistent LSH structure (optional)
+        tree["lsh.order"] = index.lsh_tables.order
+        tree["lsh.codes"] = index.lsh_tables.codes
+        tree["lsh.ties"] = index.lsh_tables.ties
+    return tree
 
 
 def _index_from_tree(tree: dict) -> ServingIndex:
     meta = json.loads(bytes(np.asarray(tree[_META_KEY])).decode("utf-8"))
+    tables = None
+    if "lsh.order" in tree:  # absent in pre-persistent-table snapshots
+        tables = LshTables(order=jnp.asarray(tree["lsh.order"]),
+                           codes=jnp.asarray(tree["lsh.codes"]),
+                           ties=jnp.asarray(tree["lsh.ties"]))
     return ServingIndex(
         points=jnp.asarray(tree["points"]),
         embedding=jnp.asarray(tree["embedding"]),
         centroids=jnp.asarray(tree["centroids"]),
         labels=jnp.asarray(tree["labels"]),
         config=OOSConfig(**meta["config"]),
+        lsh_tables=tables,
     )
 
 

@@ -366,3 +366,106 @@ def test_elastic_resharding():
         assert len(out["w"].sharding.device_set) >= 2
         print("ELASTIC-OK")
     """))
+
+
+def test_ring_exact_bitwise_matches_gather_and_single_device():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed_pipeline import make_knn_rowblock
+        from repro.core.spectral import Plan, SpectralPipeline
+        from repro.kernels.knn_topk.ops import knn_topk
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n, d, k = 1024, 16, 10
+        centers = rng.normal(size=(8, d)) * 6
+        x = jnp.asarray((centers[rng.integers(8, size=n)] +
+                         rng.normal(size=(n, d))).astype(np.float32))
+        # kernel level: ring == gather == single-device, BITWISE (the
+        # lexicographic (dist, id) merge reproduces lax.top_k tie-breaking)
+        d_ref, i_ref = knn_topk(x, k)
+        d_g, i_g = jax.jit(make_knn_rowblock(mesh, k))(x)
+        d_r, i_r = jax.jit(make_knn_rowblock(mesh, k, exchange="ring"))(x)
+        np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_g))
+        np.testing.assert_array_equal(np.asarray(i_r), np.asarray(i_ref))
+        assert (np.asarray(d_r).view(np.uint32)
+                == np.asarray(d_g).view(np.uint32)).all()
+        assert (np.asarray(d_r).view(np.uint32)
+                == np.asarray(d_ref).view(np.uint32)).all()
+        # end to end: ring-sharded pipeline labels == single-device labels
+        key = jax.random.PRNGKey(0)
+        single = SpectralPipeline(n_clusters=8).run(x, key)
+        ring = SpectralPipeline(
+            n_clusters=8, plan=Plan(device="sharded", mesh=mesh,
+                                    stage1_exchange="ring")).run(x, key)
+        np.testing.assert_array_equal(np.asarray(ring.labels),
+                                      np.asarray(single.labels))
+        print("RING-EXACT-OK")
+    """))
+
+
+def test_ring_lsh_recall_and_e2e_ari():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed_pipeline import make_knn_rowblock
+        from repro.core.spectral import GraphConfig, Plan, SpectralPipeline
+        from repro.kernels.knn_topk.ops import knn_topk
+        from repro.serve import adjusted_rand_index
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n, d, k, kc = 1024, 16, 10, 8
+        centers = rng.normal(size=(kc, d)) * 6
+        x = jnp.asarray((centers[rng.integers(kc, size=n)] +
+                         rng.normal(size=(n, d))).astype(np.float32))
+        # routed-LSH ring recall@k against exact neighbors
+        _, i_ref = knn_topk(x, k)
+        _, i_r = jax.jit(make_knn_rowblock(mesh, k, method="lsh",
+                                           exchange="ring"))(x)
+        hits = sum(len(set(a[a >= 0].tolist()) & set(b[b >= 0].tolist()))
+                   for a, b in zip(np.asarray(i_r), np.asarray(i_ref)))
+        recall = hits / max((np.asarray(i_ref) >= 0).sum(), 1)
+        assert recall >= 0.95, f"ring LSH recall@{k} {recall:.4f} < 0.95"
+        # end to end: ring LSH clustering quality >= 0.99x the gather LSH
+        # (both against the exact single-device labels)
+        key = jax.random.PRNGKey(0)
+        single = SpectralPipeline(n_clusters=kc).run(x, key)
+        aris = {}
+        for exch in ("gather", "ring"):
+            out = SpectralPipeline(
+                n_clusters=kc, graph=GraphConfig(method="lsh"),
+                plan=Plan(device="sharded", mesh=mesh,
+                          stage1_exchange=exch)).run(x, key)
+            aris[exch] = adjusted_rand_index(np.asarray(out.labels),
+                                             np.asarray(single.labels))
+        assert aris["ring"] >= 0.99 * aris["gather"], aris
+        print(f"RING-LSH-OK recall={recall:.4f} aris={aris}")
+    """))
+
+
+def test_ring_collective_bytes_model():
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed_pipeline import make_knn_rowblock
+        from repro.sparse.distributed import trace_collective_bytes
+        mesh = jax.make_mesh((8,), ("data",))
+        S, n, d, k = 8, 512, 16, 8
+        x = jnp.zeros((n, d), jnp.float32)
+        nl = n // S
+        payload = (S - 1) * nl * d * 4  # per-shard point traffic, both modes
+        bg = trace_collective_bytes(jax.jit(make_knn_rowblock(mesh, k)), x)
+        br = trace_collective_bytes(
+            jax.jit(make_knn_rowblock(mesh, k, exchange="ring")), x)
+        # gather moves the pool through ONE all_gather into an O(n*d)
+        # buffer; ring moves the same point bytes as S-1 O(n*d/S) ppermute
+        # steps and never materializes the pool
+        assert bg.get("all_gather", 0) == payload, bg
+        assert br.get("all_gather", 0) == 0, br
+        assert br.get("ppermute", 0) == payload, br
+        # ring LSH adds the candidate-routing traffic (3 table words/row)
+        brl = trace_collective_bytes(
+            jax.jit(make_knn_rowblock(mesh, k, method="lsh",
+                                      exchange="ring")), x)
+        from repro.kernels.lsh_candidates.ops import DEFAULT_N_TABLES
+        tables = (S - 1) * 3 * DEFAULT_N_TABLES * nl * 4
+        assert brl.get("ppermute", 0) == payload + tables, brl
+        print("BYTES-MODEL-OK")
+    """))

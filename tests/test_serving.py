@@ -420,3 +420,133 @@ def test_resume_rejects_conflicting_inputs(tmp_path):
     state_io.save_state(str(tmp_path), st, pipe)
     with pytest.raises(ValueError, match="resume_from"):
         pipe.run(x, KEY, resume_from=str(tmp_path))
+
+
+def test_sharded_checkpoint_resume_parity(tmp_path):
+    """A ShardedCOO input round-trips through the state codec (kind-tagged
+    meta) and a checkpoint-on-error resume lands bitwise on the no-fault
+    sharded result."""
+    import dataclasses as _dc
+
+    from repro.data.sbm import sbm_graph
+    from repro.sparse.distributed import ShardedCOO, partition_coo_by_rows
+
+    coo, _ = sbm_graph(100, 4, 0.2, 0.01, seed=3)
+    sm = partition_coo_by_rows(coo, 4)
+    pipe = SpectralPipeline(n_clusters=4,
+                            eig=EigConfig(strict=True, max_restarts=60),
+                            health=HealthConfig(max_attempts=1))
+    fresh = pipe.run(sm, KEY)
+
+    # codec roundtrip keeps the sharded layout and every bucket bitwise
+    st = pipe.run_state(sm, KEY)
+    st2, _ = state_io.state_from_tree(state_io.state_to_tree(st, pipe))
+    for name in ("input_graph",):
+        a, b = getattr(st, name), getattr(st2, name)
+        assert isinstance(b, ShardedCOO), type(b)
+        assert b.shape == a.shape and b.num_shards == a.num_shards
+    adj, adj2 = st.graph.adj, st2.graph.adj
+    assert isinstance(adj2, ShardedCOO)
+    np.testing.assert_array_equal(np.asarray(adj2.row_local),
+                                  np.asarray(adj.row_local))
+    np.testing.assert_array_equal(np.asarray(adj2.col), np.asarray(adj.col))
+    np.testing.assert_array_equal(np.asarray(adj2.val), np.asarray(adj.val))
+
+    # checkpoint on a forced embed failure, then resume from the prefix
+    with pytest.raises(PipelineError):
+        with faults.forced_nonconvergence():
+            pipe.run(sm, KEY, checkpoint_dir=str(tmp_path))
+    st, _ = state_io.load_state(str(tmp_path))
+    assert "prepare" in st.provenance and st.embedding is None
+    assert isinstance(st.graph.adj, ShardedCOO)
+    out = pipe.run(resume_from=str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(out.labels),
+                                  np.asarray(fresh.labels))
+
+
+# ---------------------------------------------------------------------------
+# oversized-request splitting (batcher) and persistent LSH tables
+# ---------------------------------------------------------------------------
+
+def test_batcher_splits_oversized_request():
+    """A request larger than batch_size is split into chunks inside the
+    batcher and the parent future resolves to the bitwise reassembly."""
+    d = 4
+
+    def fn(batch):
+        return {"double": batch * 2.0, "sum": batch.sum(axis=1)}
+
+    with MicroBatcher(fn, d, BatchConfig(batch_size=8,
+                                         max_wait_s=0.005)) as mb:
+        big = np.arange(150 * d, dtype=np.float32).reshape(150, d)
+        out = mb.submit(big).result(timeout=60)
+        assert out["double"].shape == (150, d)
+        np.testing.assert_array_equal(out["double"], big * 2.0)
+        np.testing.assert_array_equal(out["sum"], big.sum(axis=1))
+        assert mb.stats.split_requests == 1
+        assert mb.stats.rows == 150
+
+
+def test_batcher_split_failure_isolation():
+    """A failing flush fails only the requests riding in it: the split
+    request whose chunk was poisoned gets the error, a co-queued healthy
+    request still resolves."""
+    d = 4
+
+    def picky_fn(batch):
+        if np.isnan(batch).any():
+            raise ValueError("poisoned batch")
+        return batch * 2.0
+
+    with MicroBatcher(picky_fn, d, BatchConfig(batch_size=8,
+                                               max_wait_s=0.005)) as mb:
+        poisoned = np.ones((20, d), np.float32)
+        poisoned[13, 2] = np.nan
+        f_bad = mb.submit(poisoned)
+        good = np.ones((3, d), np.float32)
+        f_good = mb.submit(good)
+        np.testing.assert_array_equal(f_good.result(timeout=60), good * 2.0)
+        assert isinstance(f_bad.exception(timeout=60), ValueError)
+        assert mb.stats.failed_batches >= 1
+
+
+def test_persistent_lsh_tables_match_rehash(trained):
+    """build_index persists the pool's LSH tables; serving with them agrees
+    with the historical hash-pool-per-call path and keeps the ARI gate."""
+    import dataclasses as _dc
+
+    lsh_index = build_index(
+        trained["pool"], trained["result"],
+        config=OOSConfig(knn_k=10, sigma=1.0, method="lsh"))
+    assert lsh_index.lsh_tables is not None
+    assert lsh_index.lsh_tables.order.shape[1] == trained["pool"].shape[0]
+    queries, _ = _blobs(n_per=40, seed=13)
+    out_new = serve_fn(lsh_index, queries)
+    out_old = serve_fn(_dc.replace(lsh_index, lsh_tables=None), queries)
+    agree = float((np.asarray(out_new.labels)
+                   == np.asarray(out_old.labels)).mean())
+    assert agree >= 0.99, f"persistent/rehash label agreement {agree:.3f}"
+    exact = serve_fn(trained["index"], queries)
+    ari = adjusted_rand_index(np.asarray(out_new.labels),
+                              np.asarray(exact.labels))
+    assert ari >= 0.95, f"persistent-LSH/exact ARI {ari:.3f} < 0.95"
+
+
+def test_registry_roundtrip_persists_lsh_tables(tmp_path, trained):
+    """publish → load keeps the LSH tables (no silent rehash fallback after
+    a registry restore) and the restored index serves identical labels."""
+    lsh_index = build_index(
+        trained["pool"], trained["result"],
+        config=OOSConfig(knn_k=10, sigma=1.0, method="lsh"))
+    reg = EmbeddingRegistry(str(tmp_path))
+    reg.publish(lsh_index)
+    _, loaded = reg.load()
+    assert loaded.lsh_tables is not None
+    np.testing.assert_array_equal(np.asarray(loaded.lsh_tables.order),
+                                  np.asarray(lsh_index.lsh_tables.order))
+    np.testing.assert_array_equal(np.asarray(loaded.lsh_tables.codes),
+                                  np.asarray(lsh_index.lsh_tables.codes))
+    queries, _ = _blobs(n_per=20, seed=17)
+    np.testing.assert_array_equal(
+        np.asarray(serve_fn(loaded, queries).labels),
+        np.asarray(serve_fn(lsh_index, queries).labels))
